@@ -1,0 +1,105 @@
+"""Beyond-paper ablations that connect the paper's tables.
+
+1. predictor-quality → JCT (links Table 2 to Table 5): sweep the predictor's
+   relative error σ from oracle (0) to useless; shows how much predictor
+   quality ISRTF actually needs (the paper's implicit claim is that
+   R² ≈ 0.85 suffices — we map the whole curve).
+2. MLFQ (FastServe-style) baseline — the paper's Table 1 design-space rival.
+3. Anti-starvation aging: ISRTF's worst-case JCT with and without the aging
+   term (paper §3.4 promises starvation prevention knobs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import NoisyOraclePredictor
+from repro.core.metrics import improvement
+from repro.simulate import ExperimentConfig, compare_policies, run_experiment
+from repro.simulate.runner import make_predictor
+
+from benchmarks.common import save_results
+
+
+def predictor_quality_sweep(quick: bool = False):
+    n_req = 100 if quick else 200
+    base = ExperimentConfig(model="lam13", n_requests=n_req, batch_size=4,
+                            rps_multiple=3.0, seed=21)
+    fcfs = run_experiment(dataclasses.replace(base, policy="fcfs",
+                                              predictor="none"))
+    rows = []
+    for sigma in (0.0, 0.25, 0.5, 1.0, 2.0):
+        import repro.simulate.runner as R
+
+        cfg = dataclasses.replace(base, policy="isrtf",
+                                  predictor="noisy_oracle")
+        # patch the predictor's noise level
+        orig = R.make_predictor
+
+        def patched(kind, seed=0, bge=None, _s=sigma):
+            if _s == 0.0:
+                from repro.core import OraclePredictor
+
+                return OraclePredictor()
+            return NoisyOraclePredictor(sigma0=_s, decay=1.0, sigma_floor=_s,
+                                        seed=seed)
+
+        R.make_predictor = patched
+        try:
+            m = run_experiment(cfg)
+        finally:
+            R.make_predictor = orig
+        rows.append({
+            "sigma_rel": sigma,
+            "isrtf_jct": round(m["jct_mean"], 2),
+            "gain_vs_fcfs_pct": round(improvement(fcfs, m), 2),
+        })
+    rows.append({"fcfs_jct": round(fcfs["jct_mean"], 2)})
+    return rows
+
+
+def mlfq_comparison(quick: bool = False):
+    n_req = 100 if quick else 200
+    base = ExperimentConfig(model="lam13", n_requests=n_req, batch_size=4,
+                            rps_multiple=3.0, seed=22)
+    res = compare_policies(base, ("fcfs", "mlfq", "isrtf", "sjf"),
+                           n_trials=2)
+    return [{
+        "policy": pol,
+        "jct_mean": round(m["jct_mean"], 2),
+        "gain_vs_fcfs_pct": round(improvement(res["fcfs"], m), 2),
+    } for pol, m in res.items()]
+
+
+def aging_ablation(quick: bool = False):
+    n_req = 100 if quick else 200
+    rows = []
+    for aging in (0.0, 2.0, 10.0):
+        cfg = ExperimentConfig(model="lam13", n_requests=n_req, batch_size=4,
+                               rps_multiple=5.0, seed=23, policy="isrtf",
+                               aging_rate=aging)
+        m = run_experiment(cfg)
+        rows.append({
+            "aging_rate_tokens_per_s": aging,
+            "jct_mean": round(m["jct_mean"], 2),
+            "jct_p99": round(m["jct_p99"], 2),
+            "jct_max": round(m["jct_max"], 2),
+        })
+    return rows
+
+
+def run(quick: bool = False):
+    rows = []
+    rows += [{"ablation": "predictor_quality", **r}
+             for r in predictor_quality_sweep(quick)]
+    rows += [{"ablation": "mlfq_comparison", **r}
+             for r in mlfq_comparison(quick)]
+    rows += [{"ablation": "aging", **r} for r in aging_ablation(quick)]
+    save_results("ablations", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(r)

@@ -1,0 +1,74 @@
+"""Paper Fig. 7: peak throughput vs number of backend workers.
+
+Peak throughput = the highest request rate at which mean queuing delay stays
+≤ 0.5 s.  The paper scales 10 → 50 H100 workers (batch 4, LlaMA2-13B via
+ISRTF) and reports near-linear scaling: 2.31 RPS @ 10 workers → 18.77 RPS
+@ 50.  We binary-search the peak rate per worker count on the calibrated
+simulator (the H100 point is ~3.7x an A100 on decode bandwidth; we report
+normalised scaling efficiency, which is the paper's actual claim)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.simulate import ExperimentConfig, run_experiment
+
+from benchmarks.common import save_results
+
+QDELAY_SLO = 0.5  # seconds
+
+
+def peak_rate(n_workers: int, *, n_req: int, lo: float, hi: float,
+              iters: int = 7) -> float:
+    """Binary search the highest rate meeting the queuing-delay SLO."""
+
+    def ok(rate: float) -> bool:
+        from repro.simulate.profiles import H100_SPEEDUP
+
+        cfg = ExperimentConfig(
+            model="lam13", policy="isrtf", n_requests=n_req,
+            batch_size=4, n_nodes=n_workers, seed=13, rate_override=rate,
+            hw_speedup=H100_SPEEDUP,  # the paper's Fig-7 cluster is H100s
+        )
+        m = run_experiment(cfg)
+        return m["queuing_delay_mean"] <= QDELAY_SLO
+
+    if not ok(lo):
+        return lo
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if ok(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def run(quick: bool = False):
+    workers = [10, 30, 50] if quick else [10, 20, 30, 40, 50]
+    rows = []
+    base = None
+    for w in workers:
+        # steady-state: enough requests to cover several minutes of traffic
+        n_req = (20 if quick else 40) * w
+        rate = peak_rate(w, n_req=n_req, lo=0.02 * w, hi=2.5 * w)
+        if base is None:
+            base = (w, rate)
+        eff = (rate / base[1]) / (w / base[0])
+        rows.append({
+            "n_workers": w,
+            "peak_rps": round(rate, 3),
+            "scaling_efficiency_vs_first": round(eff, 3),
+        })
+    rows.append({
+        "paper": "H100: 2.31 RPS @ 10 workers -> 18.77 RPS @ 50 "
+                 "(near-linear, eff ~1.6 reported super-linear)",
+    })
+    save_results("fig7_scalability", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(r)

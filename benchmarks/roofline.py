@@ -1,0 +1,168 @@
+"""Roofline analysis from the compiled dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh):
+    compute term    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips × 819 GB/s HBM)
+    collective term = collective_bytes / (chips × 50 GB/s ICI)
+
+cost_analysis() on the SPMD-partitioned module reports *per-device* FLOPs
+and bytes, and the collective-byte parser sums per-device payloads — so the
+terms are per-chip times directly (no extra division); "chips" below refers
+to using per-device numbers, not dividing global numbers.
+
+Also derives MODEL_FLOPS = 6·N·D (dense; N_active for MoE) and the useful-
+compute ratio MODEL_FLOPS / (HLO_FLOPs × chips), which exposes remat /
+padding / replication waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.shapes import SHAPES
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+COSTMODEL_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                             "costmodel")
+
+
+def _corrected_costs(arch: str, shape: str, tag: str = "") -> Optional[Dict]:
+    """Scan-corrected per-device costs from the unrolled probe extrapolation
+    (see repro/launch/costprobe.py) — preferred over the rolled-scan HLO
+    numbers, which count loop bodies once."""
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(COSTMODEL_DIR, f"{arch}_{shape}_single{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    rec = json.load(open(path))
+    if rec.get("status") != "ok":
+        return None
+    return rec["corrected"]
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs for the whole step (global, all chips)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens  # fwd 2ND + bwd 4ND
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * min(
+            shape.seq_len, cfg.max_position_embeddings
+            if cfg.family == "audio" else shape.seq_len)
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    flops_dev = rec["flops"]           # per-device (SPMD module)
+    bytes_dev = rec["bytes_accessed"]
+    coll_dev = rec["collectives"]["total"]
+    corrected = False
+    if rec["mesh"] == "single":
+        corr = _corrected_costs(rec["arch"], rec["shape"],
+                                rec.get("tag", ""))
+        if corr:
+            flops_dev = corr["flops"]
+            bytes_dev = corr["bytes_accessed"]
+            coll_dev = corr["collective_bytes"]
+            corrected = True
+
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(flops_dev * chips, 1.0)
+    bound_time = max(terms.values())
+    # fraction of the roofline bound that is useful compute
+    mfu_bound = (mf / chips / PEAK_FLOPS_BF16) / max(bound_time, 1e-30)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "chips": chips,
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_compute_ratio": useful,
+        "roofline_mfu_bound": mfu_bound,
+        "scan_corrected": corrected,
+        "peak_gb": rec["memory_analysis"].get("peak_memory_in_bytes", 0)
+        / 2**30,
+        "fits_hbm16": rec["memory_analysis"].get("peak_memory_in_bytes", 0)
+        <= 16 * 2**30,
+    }
+
+
+def suggestion(row: Dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("overlap/shrink collectives: reduce-scatter instead of "
+                "all-reduce, shard activations to kill all-gathers")
+    if d == "memory":
+        if row["shape"].startswith("decode") or row["shape"] == "long_500k":
+            return ("KV bytes dominate: quantize KV (int8), GQA-style head "
+                    "reduction, or larger per-chip batch to amortise weights")
+        return "fuse/remat to cut activation traffic; bf16 everywhere"
+    return "increase per-chip arithmetic intensity (bigger tiles, less pad)"
+
+
+def load_records(tag: str = "") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if r.get("tag", "") == tag:
+            recs.append(r)
+    return recs
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rows = []
+    for rec in load_records():
+        a = analyze_record(rec)
+        if a:
+            a["suggestion"] = suggestion(a)
+            rows.append(a)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+           " | dominant | useful ratio | peak GB | fits 16GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_compute_ratio']:.2f} | {r['peak_gb']:.1f} "
+            f"| {'yes' if r['fits_hbm16'] else 'NO'} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown_table(rows))
+    from benchmarks.common import save_results
+
+    save_results("roofline", rows)

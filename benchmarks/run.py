@@ -1,0 +1,88 @@
+"""Benchmark harness — one function per paper table/figure.
+
+``python -m benchmarks.run [--full]`` executes every benchmark and prints a
+``name,us_per_call,derived`` CSV line per benchmark (us_per_call = wall time
+of the benchmark itself; derived = its headline result).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size runs (default: quick)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        ablations,
+        appendixA_preemption,
+        fig1_embedding,
+        fig2_iterative_mae,
+        fig4_arrivals,
+        fig6_batch_sizes,
+        fig7_scalability,
+        live_engine,
+        roofline,
+        table2_predictor,
+        table5_jct,
+    )
+
+    benches = [
+        ("fig1_embedding", fig1_embedding.run,
+         lambda rows: f"separation_ratio={rows[0]['separation_ratio']}"),
+        ("fig4_arrivals", fig4_arrivals.run,
+         lambda rows: f"gamma_fits_better={rows[0]['gamma_fits_better']};"
+                      f"alpha={rows[0]['fit_alpha']}"),
+        ("table2_predictor", table2_predictor.run,
+         lambda rows: f"r2_untrained={rows[0]['r2']:.2f};"
+                      f"r2_trained={rows[1]['r2']:.2f};"
+                      f"mae_trained={rows[1]['mae']:.1f}"),
+        ("fig2_iterative_mae", fig2_iterative_mae.run,
+         lambda rows: "mae_by_step=" + "/".join(
+             f"{r['mae']:.0f}" for r in rows)),
+        ("table5_jct", table5_jct.run,
+         lambda rows: f"mean_isrtf_gain_pct={sum(r['isrtf_vs_fcfs_pct'] for r in rows)/len(rows):.1f}"),
+        ("fig6_batch_sizes", fig6_batch_sizes.run,
+         lambda rows: f"max_gain_pct={max(r['improvement_pct'] for r in rows):.1f}"),
+        ("fig7_scalability", fig7_scalability.run,
+         lambda rows: f"peak_rps@{rows[-2]['n_workers']}w={rows[-2]['peak_rps']}"),
+        ("appendixA_preemption", appendixA_preemption.run,
+         lambda rows: f"onset_within_2x={sum(1 for r in rows if r.get('within_2x_of_paper'))}/5"),
+        ("live_engine", live_engine.run,
+         lambda rows: f"live_gain_pct={rows[-1]['live_isrtf_vs_fcfs_improvement_pct']}"),
+        ("ablations", ablations.run,
+         lambda rows: "mlfq_gain_pct=" + str(next(
+             (r["gain_vs_fcfs_pct"] for r in rows
+              if r.get("ablation") == "mlfq_comparison"
+              and r.get("policy") == "mlfq"), "?")) + ";sigma_sweep=" + "/".join(
+             f"{r['gain_vs_fcfs_pct']:.0f}" for r in rows
+             if r.get("ablation") == "predictor_quality" and "sigma_rel" in r)),
+        ("roofline", roofline.run,
+         lambda rows: f"pairs={len(rows)};"
+                      f"collective_bound={sum(1 for r in rows if r['dominant']=='collective')};"
+                      f"memory_bound={sum(1 for r in rows if r['dominant']=='memory')}"),
+    ]
+
+    print("name,us_per_call,derived")
+    for name, fn, derive in benches:
+        if args.only and args.only != name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn(quick=quick)
+            derived = derive(rows) if rows else "no-results"
+        except Exception as e:  # noqa: BLE001
+            derived = f"ERROR:{e!r}"
+            rows = []
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{us:.0f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Paper Table 2: pre-trained (untrained head) vs fine-tuned BGE predictor.
+
+Paper numbers (LMSYS dataset): pretrained MAE 175.99 / RMSE 224.98 / R² -1.58;
+fine-tuned MAE 71.48 / RMSE 101.29 / R² 0.48; on the vLLM-collected set the
+final model reaches MAE 19.9 / RMSE 34.3 / R² 0.852 (§4.2).
+
+Our claim to reproduce: fine-tuning moves R² from ≲0 to strongly positive and
+slashes MAE/RMSE on the synthetic LMSYS-like workload.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import BGEPredictor, PredictorConfig
+from repro.data import make_predictor_dataset
+from repro.models.encoder import EncoderArchConfig
+
+from benchmarks.common import save_results
+
+
+def run(quick: bool = False) -> List[Dict]:
+    n_req = 600 if quick else 2000
+    steps = 300 if quick else 1200
+    # paper trains the full BGE at lr 1e-4; our scratch-substitute encoder
+    # (DESIGN.md §7) trains from random init, so a proportionally higher LR
+    cfg = PredictorConfig(
+        encoder=EncoderArchConfig(d_model=128, n_heads=4, n_layers=3,
+                                  d_ff=256, max_len=192),
+        n_fc_layers=8, fc_hidden=256, max_len=192, lr=3e-4,
+    )
+    tr, va, te = make_predictor_dataset(n_req, seed=0, max_len=192,
+                                        max_steps=6)
+    pred = BGEPredictor(cfg, seed=0)
+    before = pred.evaluate(te)
+    t0 = time.time()
+    pred.fit(tr, num_steps=steps, batch_size=32)
+    train_s = time.time() - t0
+    after = pred.evaluate(te)
+    rows = [
+        {"model": "untrained (≈ pre-trained BGE)", **before},
+        {"model": "fine-tuned", **after,
+         "train_seconds": round(train_s, 1), "train_steps": steps,
+         "n_train_samples": len(tr), "n_test_samples": len(te)},
+        {"model": "paper pretrained (LMSYS)", "mae": 175.99, "rmse": 224.98,
+         "r2": -1.58},
+        {"model": "paper fine-tuned (LMSYS)", "mae": 71.48, "rmse": 101.29,
+         "r2": 0.48},
+        {"model": "paper fine-tuned (vLLM set)", "mae": 19.92, "rmse": 34.33,
+         "r2": 0.852},
+    ]
+    save_results("table2_predictor", rows)
+    return rows
+
+
+#: the trained predictor is reused by fig2 — cache it at module scope
+_cache = {}
+
+
+def trained_predictor(quick: bool = False):
+    key = ("pred", quick)
+    if key not in _cache:
+        n_req = 600 if quick else 2000
+        steps = 300 if quick else 1200
+        cfg = PredictorConfig(
+            encoder=EncoderArchConfig(d_model=128, n_heads=4, n_layers=3,
+                                      d_ff=256, max_len=192),
+            n_fc_layers=8, fc_hidden=256, max_len=192, lr=3e-4,
+        )
+        tr, va, te = make_predictor_dataset(n_req, seed=0, max_len=192,
+                                            max_steps=6)
+        pred = BGEPredictor(cfg, seed=0)
+        pred.fit(tr, num_steps=steps, batch_size=32)
+        _cache[key] = (pred, te)
+    return _cache[key]
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(r)

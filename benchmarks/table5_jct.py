@@ -1,0 +1,77 @@
+"""Paper Table 5 / Fig. 5: average JCT per model × RPS × scheduler.
+
+5 models (opt6.7, opt13, lam7, lam13, vic) × RPS multiples {1, 3, 5} ×
+{FCFS, ISRTF, SJF-oracle}, batch size 4, 200 prompts, 3 shuffled trials —
+the paper's main experiment, on the calibrated discrete-event cluster.
+Also reproduces the Fig. 5-right queuing-delay decomposition for the best
+case and the ISRTF-vs-FCFS improvement matrix.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.metrics import improvement
+from repro.simulate import ExperimentConfig, compare_policies
+
+from benchmarks.common import save_results
+
+#: paper Table 5 (avg JCT seconds) for side-by-side reporting
+PAPER_TABLE5 = {
+    ("opt13", 1.0): (77.83, 73.57, 20.35),
+    ("opt13", 3.0): (116.46, 98.74, 43.63),
+    ("opt13", 5.0): (118.13, 118.11, 43.63),
+    ("opt6.7", 1.0): (45.08, 50.52, 13.21),
+    ("opt6.7", 3.0): (83.42, 72.33, 24.62),
+    ("opt6.7", 5.0): (73.93, 74.41, 31.91),
+    ("vic", 1.0): (93.42, 73.43, 32.34),
+    ("vic", 3.0): (134.96, 118.22, 58.39),
+    ("vic", 5.0): (144.23, 131.38, 60.98),
+    ("lam13", 1.0): (240.25, 212.60, 70.55),
+    ("lam13", 3.0): (350.55, 352.53, 133.11),
+    ("lam13", 5.0): (451.59, 377.29, 125.59),
+    ("lam7", 1.0): (91.28, 130.71, 37.02),
+    ("lam7", 3.0): (229.64, 200.34, 59.37),
+    ("lam7", 5.0): (251.66, 234.08, 89.64),
+}
+
+
+def run(quick: bool = False) -> List[Dict]:
+    models = ["opt6.7", "lam13"] if quick else ["opt6.7", "opt13", "lam7",
+                                                "lam13", "vic"]
+    rps_list = [1.0, 3.0] if quick else [1.0, 3.0, 5.0]
+    n_req = 100 if quick else 200
+    n_trials = 2 if quick else 3
+    rows = []
+    for model in models:
+        for rps in rps_list:
+            cfg = ExperimentConfig(model=model, n_requests=n_req,
+                                   batch_size=4, rps_multiple=rps, seed=7)
+            res = compare_policies(cfg, ("fcfs", "isrtf", "sjf"),
+                                   n_trials=n_trials)
+            paper = PAPER_TABLE5.get((model, rps))
+            row = {
+                "model": model,
+                "rps_multiple": rps,
+                "fcfs_jct": round(res["fcfs"]["jct_mean"], 2),
+                "isrtf_jct": round(res["isrtf"]["jct_mean"], 2),
+                "sjf_jct": round(res["sjf"]["jct_mean"], 2),
+                "isrtf_vs_fcfs_pct": round(improvement(res["fcfs"],
+                                                       res["isrtf"]), 2),
+                "sjf_vs_fcfs_pct": round(improvement(res["fcfs"],
+                                                     res["sjf"]), 2),
+                "fcfs_qdelay": round(res["fcfs"]["queuing_delay_mean"], 2),
+                "isrtf_qdelay": round(res["isrtf"]["queuing_delay_mean"], 2),
+                "ordering_ok": res["sjf"]["jct_mean"]
+                <= res["isrtf"]["jct_mean"] * 1.1
+                and res["isrtf"]["jct_mean"] <= res["fcfs"]["jct_mean"] * 1.1,
+            }
+            if paper:
+                row["paper_fcfs"], row["paper_isrtf"], row["paper_sjf"] = paper
+            rows.append(row)
+    save_results("table5_jct", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(r)

@@ -1,0 +1,68 @@
+"""Quickstart: serve a reduced model through ELIS with ISRTF scheduling.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a reduced qwen2-1.5b, submits a handful of prompts with bursty
+(Gamma) arrivals, and prints per-job JCT under the ISRTF scheduler driving
+the live JAX engine.
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (
+    ELISFrontend,
+    FrontendConfig,
+    Job,
+    OraclePredictor,
+    SchedulerConfig,
+    summarize,
+)
+from repro.data import GammaArrivals, HashTokenizer
+from repro.engine import EngineConfig, EngineExecutor, InferenceEngine
+from repro.models import init_params
+
+
+def main():
+    cfg = get_config("qwen2-1.5b").reduced()
+    print(f"model: {cfg.arch_id} ({cfg.n_layers}L d={cfg.d_model})")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = InferenceEngine(cfg, params, EngineConfig(
+        max_slots=2, max_len=256, max_output=24, eos_id=-1,
+        respect_job_max=True))
+
+    frontend = ELISFrontend(
+        FrontendConfig(n_nodes=1,
+                       scheduler=SchedulerConfig(policy="isrtf", window=8,
+                                                 batch_size=2)),
+        OraclePredictor(),
+        EngineExecutor({0: engine}),
+    )
+
+    tok = HashTokenizer()
+    prompts = [
+        ("what is the weather forecast", 8),
+        ("write a long detailed story about a storm", 24),
+        ("yes or no: is it raining", 6),
+        ("explain how rain forms step by step", 16),
+    ]
+    rng = np.random.RandomState(0)
+    arrivals = GammaArrivals().rate_scaled(2.0).sample_arrival_times(
+        len(prompts), rng)
+    for i, ((text, length), t) in enumerate(zip(prompts, arrivals)):
+        frontend.submit(Job(job_id=i, prompt=text,
+                            prompt_tokens=tok.encode(text),
+                            arrival_time=float(t), true_output_len=length))
+
+    done = frontend.run()
+    print(f"\n{'job':>3s} {'len':>4s} {'JCT s':>8s} {'queue s':>8s}  prompt")
+    for j in sorted(done, key=lambda j: j.job_id):
+        print(f"{j.job_id:3d} {j.tokens_generated:4d} {j.jct():8.2f} "
+              f"{j.queuing_delay:8.2f}  {j.prompt[:40]}")
+    m = summarize(done)
+    print(f"\nmean JCT {m['jct_mean']:.2f}s; mean queuing delay "
+          f"{m['queuing_delay_mean']:.2f}s; throughput {m['throughput_rps']:.2f} req/s")
+
+
+if __name__ == "__main__":
+    main()

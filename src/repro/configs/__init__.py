@@ -1,0 +1,22 @@
+"""Architecture configuration registry (``--arch <id>``)."""
+from repro.configs.base import (
+    EncoderConfig,
+    HybridConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    get_config,
+    list_archs,
+    register,
+)
+
+__all__ = [
+    "EncoderConfig",
+    "HybridConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "get_config",
+    "list_archs",
+    "register",
+]

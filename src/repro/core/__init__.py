@@ -1,0 +1,39 @@
+"""ELIS core: the paper's contribution (ISRTF + iterative length predictor)."""
+from repro.core.job import Job, JobState
+from repro.core.load_balancer import GlobalState, LoadBalancer
+from repro.core.metrics import improvement, summarize
+from repro.core.predictor import (
+    BGEPredictor,
+    NoisyOraclePredictor,
+    OraclePredictor,
+    PredictorConfig,
+)
+from repro.core.scheduler import (
+    PreemptionConfig,
+    PriorityBuffer,
+    SchedulerConfig,
+    make_policy,
+    select_preemptions,
+)
+from repro.core.frontend import ELISFrontend, ExecResult, FrontendConfig
+
+__all__ = [
+    "BGEPredictor",
+    "ELISFrontend",
+    "ExecResult",
+    "FrontendConfig",
+    "GlobalState",
+    "Job",
+    "JobState",
+    "LoadBalancer",
+    "NoisyOraclePredictor",
+    "OraclePredictor",
+    "PredictorConfig",
+    "PreemptionConfig",
+    "PriorityBuffer",
+    "SchedulerConfig",
+    "improvement",
+    "make_policy",
+    "select_preemptions",
+    "summarize",
+]

@@ -1,0 +1,191 @@
+"""ELIS frontend scheduler — Algorithm 1 as an event-driven loop.
+
+One implementation drives both backends:
+  * the **cluster simulator** (``repro.simulate``) — virtual time, calibrated
+    per-model latency, 50 workers on a laptop;
+  * the **live JAX engine** (``repro.engine``) — real decode windows, wall
+    clock measured and fed back as event durations.
+
+Semantics (faithful to the paper):
+  * iteration-level batching with a fixed window of K=50 tokens;
+  * per-node PriorityBuffer; greedy min-load balancing at arrival;
+  * slot *stickiness*: a running job keeps its batch slot until it finishes —
+    unless the preemption policy displaces it (FCFS ⇒ non-preemptive ORCA
+    behaviour; ISRTF ⇒ priority preemption at window boundaries with
+    margin/frequency knobs);
+  * displaced jobs pay a KV-recompute cost when they next run;
+  * prompts are sent to the backend once (re-dispatch is metadata-only).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+
+from repro.core.job import Job, JobState
+from repro.core.load_balancer import GlobalState, LoadBalancer
+from repro.core.predictor import Predictor
+from repro.core.scheduler import (
+    Policy,
+    PreemptionConfig,
+    SchedulerConfig,
+    make_policy,
+    select_preemptions,
+)
+
+
+class ExecResult:
+    def __init__(self, duration: float, tokens: List[List[int]],
+                 finished: List[bool]):
+        self.duration = duration
+        self.tokens = tokens
+        self.finished = finished
+
+
+class Executor(Protocol):
+    def execute(self, node: int, jobs: Sequence[Job], window: int,
+                now: float) -> ExecResult: ...
+
+    def evict(self, node: int, job: Job) -> None: ...
+
+
+@dataclass
+class FrontendConfig:
+    n_nodes: int = 1
+    scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+    preemption: PreemptionConfig = field(default_factory=PreemptionConfig)
+
+
+def batch_effective(policy: Policy, jobs: Sequence[Job], now: float) -> List[float]:
+    """Assign priorities to ``jobs`` (batched through the predictor when it
+    supports it) and return effective (aging-adjusted) priorities."""
+    pred = policy.predictor
+    if (
+        policy.name == "isrtf"
+        and pred is not None
+        and hasattr(pred, "predict_jobs")
+        and len(jobs) > 1
+    ):
+        raw = pred.predict_jobs(jobs)
+        pris = [float(r) for r in raw]
+    else:
+        pris = [policy.priority(j, now) for j in jobs]
+    out = []
+    for j, p in zip(jobs, pris):
+        j.priority = p
+        j.predictions.append(p)
+        eff = p
+        if policy.cfg.aging_rate > 0 and j.last_enqueue_time is not None:
+            eff -= policy.cfg.aging_rate * max(now - j.last_enqueue_time, 0.0)
+        out.append(eff)
+    return out
+
+
+class ELISFrontend:
+    def __init__(self, cfg: FrontendConfig, predictor: Optional[Predictor],
+                 executor: Executor):
+        self.cfg = cfg
+        self.policy = make_policy(cfg.scheduler, predictor)
+        self.executor = executor
+        self.state = GlobalState(cfg.n_nodes)
+        self.balancer = LoadBalancer(self.state)
+        # per-node structures
+        self.waiting: Dict[int, List[Job]] = {n: [] for n in range(cfg.n_nodes)}
+        self.running: Dict[int, List[Job]] = {n: [] for n in range(cfg.n_nodes)}
+        self.node_busy: Dict[int, bool] = {n: False for n in range(cfg.n_nodes)}
+        self.finished: List[Job] = []
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+
+    # ------------------------------------------------------------------ #
+    def _push_event(self, t: float, kind: str, data) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, data))
+
+    def submit(self, job: Job) -> None:
+        self._push_event(job.arrival_time, "arrival", job)
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> List[Job]:
+        while self._events:
+            now, _, kind, data = heapq.heappop(self._events)
+            if kind == "arrival":
+                self._on_arrival(data, now)
+            elif kind == "node_free":
+                self._on_node_free(data, now)
+        return self.finished
+
+    # ------------------------------------------------------------------ #
+    def _on_arrival(self, job: Job, now: float) -> None:
+        node = self.balancer.assign(job)
+        job.state = JobState.WAITING
+        job.record_enqueue(now)
+        self.waiting[node].append(job)
+        if not self.node_busy[node]:
+            self._push_event(now, "node_free", node)
+            self.node_busy[node] = True  # claimed; released when truly idle
+
+    def _on_node_free(self, node: int, now: float) -> None:
+        batch = self._form_batch(node, now)
+        if not batch:
+            self.node_busy[node] = False
+            return
+        res = self.executor.execute(node, batch,
+                                    self.cfg.scheduler.window, now)
+        end = now + res.duration
+        for job, toks, fin in zip(batch, res.tokens, res.finished):
+            job.generated.extend(toks)
+            job.n_iterations += 1
+            if job.first_token_time is None and toks:
+                job.first_token_time = end
+            if fin:
+                job.finished = True
+                job.state = JobState.FINISHED
+                job.finish_time = end
+                self.finished.append(job)
+                self.running[node].remove(job)
+                self.state.finish_job(node)
+                self.executor.evict(node, job)
+        self._push_event(end, "node_free", node)
+        self.node_busy[node] = True
+
+    # ------------------------------------------------------------------ #
+    def _form_batch(self, node: int, now: float) -> List[Job]:
+        cap = self.cfg.scheduler.batch_size
+        running = self.running[node]
+        waiting = self.waiting[node]
+        if not running and not waiting:
+            return []
+
+        run_eff = batch_effective(self.policy, running, now) if running else []
+        wait_eff = batch_effective(self.policy, waiting, now) if waiting else []
+
+        # 1. preemption: displace low-priority running jobs (margin-gated)
+        swaps = select_preemptions(
+            list(zip(run_eff, running)), list(zip(wait_eff, waiting)),
+            self.cfg.preemption,
+        )
+        for victim, repl in swaps:
+            running.remove(victim)
+            victim.state = JobState.PREEMPTED
+            victim.n_preemptions += 1
+            victim.record_enqueue(now)
+            waiting.append(victim)
+            self.executor.evict(node, victim)
+            waiting.remove(repl)
+            repl.state = JobState.RUNNING
+            repl.record_dispatch(now)
+            running.append(repl)
+
+        # 2. fill free slots with the best remaining waiters
+        free = cap - len(running)
+        if free > 0 and waiting:
+            order = sorted(
+                zip(batch_effective(self.policy, waiting, now), itertools.count(), waiting)
+            )
+            for _, _, job in order[:free]:
+                waiting.remove(job)
+                job.state = JobState.RUNNING
+                job.record_dispatch(now)
+                running.append(job)
+        return list(running)

@@ -1,0 +1,73 @@
+"""Job records managed by the ELIS frontend (paper §4.1).
+
+A *job* is the scheduler-internal record of one prompt: its text/tokens, the
+backend node it was balanced onto, its current priority (predicted remaining
+tokens), the partial response accumulated over scheduling iterations, and the
+timestamps from which JCT / queuing delay are computed.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class JobState(enum.Enum):
+    WAITING = "waiting"      # in JobPool, not yet dispatched this iteration
+    RUNNING = "running"      # inside a backend batch
+    PREEMPTED = "preempted"  # evicted mid-generation; resumes from tokens
+    FINISHED = "finished"
+
+
+@dataclass
+class Job:
+    job_id: int
+    prompt: str
+    prompt_tokens: List[int]
+    arrival_time: float
+    #: ground-truth response length — known to the generator/oracle only
+    true_output_len: int = 0
+    #: precomputed response token stream (simulator replays it)
+    output_tokens: List[int] = field(default_factory=list)
+
+    node: int = -1
+    state: JobState = JobState.WAITING
+    #: scheduler priority = predicted remaining tokens (lower runs first)
+    priority: Optional[float] = None
+    #: prediction history, one entry per scheduling iteration (paper Fig. 2)
+    predictions: List[float] = field(default_factory=list)
+
+    generated: List[int] = field(default_factory=list)
+    finished: bool = False
+
+    # timing
+    first_dispatch_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    #: cumulative time spent waiting in the JobPool while not executing
+    queuing_delay: float = 0.0
+    last_enqueue_time: Optional[float] = None
+    n_preemptions: int = 0
+    n_iterations: int = 0
+
+    @property
+    def tokens_generated(self) -> int:
+        return len(self.generated)
+
+    @property
+    def true_remaining(self) -> int:
+        return max(self.true_output_len - self.tokens_generated, 0)
+
+    def jct(self) -> float:
+        assert self.finish_time is not None
+        return self.finish_time - self.arrival_time
+
+    def record_enqueue(self, now: float) -> None:
+        self.last_enqueue_time = now
+
+    def record_dispatch(self, now: float) -> None:
+        if self.first_dispatch_time is None:
+            self.first_dispatch_time = now
+        if self.last_enqueue_time is not None:
+            self.queuing_delay += max(now - self.last_enqueue_time, 0.0)
+            self.last_enqueue_time = None

@@ -1,0 +1,39 @@
+"""Greedy min-load balancer over backend workers (paper §4.1 line 3).
+
+Consults the global state G — the number of live jobs per backend — and
+assigns each new job to the worker executing the fewest (StatefulSet pod
+identity maps to the integer node id).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+class GlobalState:
+    """The frontend's shared-memory view of the cluster."""
+
+    def __init__(self, n_nodes: int):
+        self.n_nodes = n_nodes
+        self.active_jobs: Dict[int, int] = {n: 0 for n in range(n_nodes)}
+        self.busy_until: Dict[int, float] = {n: 0.0 for n in range(n_nodes)}
+
+    def add_job(self, node: int) -> None:
+        self.active_jobs[node] += 1
+
+    def finish_job(self, node: int) -> None:
+        self.active_jobs[node] -= 1
+        assert self.active_jobs[node] >= 0
+
+
+class LoadBalancer:
+    def __init__(self, state: GlobalState):
+        self.state = state
+
+    def get_min_load(self) -> int:
+        return min(self.state.active_jobs, key=lambda n: (self.state.active_jobs[n], n))
+
+    def assign(self, job) -> int:
+        node = self.get_min_load()
+        job.node = node
+        self.state.add_job(node)
+        return node

@@ -1,0 +1,40 @@
+"""JCT / queuing-delay / throughput metrics (paper §6 evaluation)."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.job import Job
+
+
+def summarize(jobs: Sequence[Job]) -> Dict[str, float]:
+    jcts = np.array([j.jct() for j in jobs])
+    qd = np.array([j.queuing_delay for j in jobs])
+    makespan = max(j.finish_time for j in jobs) - min(
+        j.arrival_time for j in jobs
+    )
+    return {
+        "n": len(jobs),
+        "jct_mean": float(jcts.mean()),
+        "jct_p50": float(np.percentile(jcts, 50)),
+        "jct_p99": float(np.percentile(jcts, 99)),
+        "jct_min": float(jcts.min()),
+        "jct_max": float(jcts.max()),
+        "queuing_delay_mean": float(qd.mean()),
+        "throughput_rps": len(jobs) / max(makespan, 1e-9),
+        "makespan": float(makespan),
+        "preemptions": int(sum(j.n_preemptions for j in jobs)),
+        "ttft_mean": float(
+            np.mean([
+                j.first_token_time - j.arrival_time
+                for j in jobs if j.first_token_time is not None
+            ])
+        ),
+    }
+
+
+def improvement(base: Dict[str, float], new: Dict[str, float],
+                key: str = "jct_mean") -> float:
+    """Percent reduction of ``key`` relative to ``base`` (paper Fig. 6)."""
+    return 100.0 * (base[key] - new[key]) / base[key]

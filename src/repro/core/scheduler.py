@@ -1,0 +1,184 @@
+"""Scheduling policies: FCFS, SJF (oracle one-shot), ISRTF (the paper's
+contribution), and MLFQ (FastServe-style, for comparison).
+
+A policy assigns each job a *priority* — smaller runs earlier.  ISRTF
+re-predicts the remaining length every scheduling iteration (Algorithm 1
+lines 11–14): ``Predictor.init`` on first sight, ``Predictor.iter`` after.
+
+Anti-starvation: an aging term subtracts ``aging_rate * wait_seconds`` from
+the effective priority so long-waiting jobs eventually run regardless of
+length (paper §3.4: "policies that ... prevent starvation").
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.job import Job
+from repro.core.predictor import Predictor
+
+
+@dataclass
+class SchedulerConfig:
+    policy: str = "isrtf"  # fcfs | sjf | isrtf | mlfq
+    #: tokens per scheduling iteration (paper: 50)
+    window: int = 50
+    #: max jobs per backend batch
+    batch_size: int = 4
+    #: aging: priority units (tokens) forgiven per second of waiting; 0 = off
+    aging_rate: float = 0.0
+    #: MLFQ quantum boundaries in generated tokens
+    mlfq_levels: Tuple[int, ...] = (50, 200, 800)
+
+
+class Policy:
+    """Base: FCFS."""
+
+    name = "fcfs"
+
+    def __init__(self, cfg: SchedulerConfig, predictor: Optional[Predictor]):
+        self.cfg = cfg
+        self.predictor = predictor
+
+    def priority(self, job: Job, now: float) -> float:
+        return job.arrival_time
+
+    def effective(self, job: Job, now: float) -> float:
+        p = self.priority(job, now)
+        job.priority = p
+        job.predictions.append(p)
+        if self.cfg.aging_rate > 0 and job.last_enqueue_time is not None:
+            p -= self.cfg.aging_rate * max(now - job.last_enqueue_time, 0.0)
+        return p
+
+
+class FCFSPolicy(Policy):
+    name = "fcfs"
+
+
+class SJFPolicy(Policy):
+    """One-shot shortest-job-first: predict once at arrival, never update
+    (Qiu et al. / the paper's oracle baseline when given OraclePredictor)."""
+
+    name = "sjf"
+
+    def priority(self, job: Job, now: float) -> float:
+        if job.priority is None:
+            return float(self.predictor.init(job))
+        # keep the arrival-time estimate: total predicted length minus
+        # whatever has already been generated
+        first = job.predictions[0] if job.predictions else job.priority
+        return max(float(first) - job.tokens_generated, 0.0)
+
+
+class ISRTFPolicy(Policy):
+    """Iterative shortest-remaining-time-first (the paper's scheduler)."""
+
+    name = "isrtf"
+
+    def priority(self, job: Job, now: float) -> float:
+        if job.priority is None:
+            return float(self.predictor.init(job))
+        return float(self.predictor.iter(job))
+
+
+class MLFQPolicy(Policy):
+    """FastServe-style multi-level feedback queue on service received."""
+
+    name = "mlfq"
+
+    def priority(self, job: Job, now: float) -> float:
+        level = 0
+        for bound in self.cfg.mlfq_levels:
+            if job.tokens_generated >= bound:
+                level += 1
+        # within a level, FCFS
+        return level * 1e9 + job.arrival_time
+
+
+POLICIES = {
+    "fcfs": FCFSPolicy,
+    "sjf": SJFPolicy,
+    "isrtf": ISRTFPolicy,
+    "mlfq": MLFQPolicy,
+}
+
+
+def make_policy(cfg: SchedulerConfig, predictor: Optional[Predictor]) -> Policy:
+    try:
+        cls = POLICIES[cfg.policy]
+    except KeyError:
+        raise ValueError(f"unknown policy {cfg.policy!r}") from None
+    if cls in (SJFPolicy, ISRTFPolicy) and predictor is None:
+        raise ValueError(f"{cfg.policy} requires a predictor")
+    return cls(cfg, predictor)
+
+
+# --------------------------------------------------------------------------- #
+# PriorityBuffer (paper §4.1: one priority queue per backend node)
+# --------------------------------------------------------------------------- #
+
+
+class PriorityBuffer:
+    def __init__(self):
+        self._heaps: Dict[int, List] = {}
+        self._count = itertools.count()
+
+    def push(self, node: int, prio: float, job: Job) -> None:
+        heapq.heappush(self._heaps.setdefault(node, []),
+                       (prio, next(self._count), job))
+
+    def pop_batch(self, node: int, k: int) -> List[Job]:
+        heap = self._heaps.get(node, [])
+        out = []
+        while heap and len(out) < k:
+            out.append(heapq.heappop(heap)[2])
+        return out
+
+    def depth(self, node: int) -> int:
+        return len(self._heaps.get(node, []))
+
+
+# --------------------------------------------------------------------------- #
+# Preemption (paper §3.4 / Appendix A)
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class PreemptionConfig:
+    """Knobs for 'adjusting the frequency of preemption' (paper §1, §3.4)."""
+
+    enabled: bool = True
+    #: a waiting job must beat a running job's priority by this many tokens
+    #: (paper §3.4: preemption should be rare; one window's worth of tokens)
+    margin: float = 50.0
+    #: at most this fraction of a batch may be preempted per iteration
+    max_fraction: float = 0.25
+    #: per-preemption cost charged when the victim resumes (KV recompute),
+    #: expressed in prompt-tokens re-prefilled
+    recompute_tokens: bool = True
+
+
+def select_preemptions(
+    running: Sequence[Tuple[float, Job]],
+    waiting: Sequence[Tuple[float, Job]],
+    cfg: PreemptionConfig,
+) -> List[Tuple[Job, Job]]:
+    """Given (priority, job) for the running batch and the waiting queue,
+    return [(victim, replacement), ...] — lowest-priority running jobs are
+    displaced by strictly-higher-priority waiters (vLLM's priority preemption
+    with our margin/frequency knobs)."""
+    if not cfg.enabled or not running or not waiting:
+        return []
+    budget = max(int(len(running) * cfg.max_fraction), 0)
+    victims = sorted(running, key=lambda t: -t[0])  # worst running first
+    claimants = sorted(waiting, key=lambda t: t[0])  # best waiting first
+    swaps: List[Tuple[Job, Job]] = []
+    for (rp, rjob), (wp, wjob) in zip(victims, claimants):
+        if len(swaps) >= budget:
+            break
+        if wp + cfg.margin < rp:
+            swaps.append((rjob, wjob))
+    return swaps

@@ -1,0 +1,41 @@
+from repro.data.arrivals import (
+    FABRIX_ALPHA,
+    FABRIX_SCALE,
+    GammaArrivals,
+    PoissonArrivals,
+    exponential_loglik,
+    fit_gamma,
+    gamma_loglik,
+)
+from repro.data.dataset import (
+    WINDOW,
+    batch_iterator,
+    build_step_samples,
+    iqr_filter,
+    make_predictor_dataset,
+    pad_batch,
+    split_622,
+)
+from repro.data.tokenizer import HashTokenizer
+from repro.data.workload import Request, WorkloadGenerator, similarity_probe_sets
+
+__all__ = [
+    "FABRIX_ALPHA",
+    "FABRIX_SCALE",
+    "GammaArrivals",
+    "HashTokenizer",
+    "PoissonArrivals",
+    "Request",
+    "WINDOW",
+    "WorkloadGenerator",
+    "batch_iterator",
+    "build_step_samples",
+    "exponential_loglik",
+    "fit_gamma",
+    "gamma_loglik",
+    "iqr_filter",
+    "make_predictor_dataset",
+    "pad_batch",
+    "similarity_probe_sets",
+    "split_622",
+]

@@ -1,0 +1,10 @@
+from repro.engine.engine import EngineConfig, EngineExecutor, InferenceEngine
+from repro.engine.sampler import SamplerConfig, sample
+
+__all__ = [
+    "EngineConfig",
+    "EngineExecutor",
+    "InferenceEngine",
+    "SamplerConfig",
+    "sample",
+]

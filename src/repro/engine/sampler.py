@@ -1,0 +1,25 @@
+"""Token samplers."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0  # 0 = greedy
+    top_k: int = 0            # 0 = full softmax
+
+
+def sample(logits: jnp.ndarray, key, cfg: SamplerConfig) -> jnp.ndarray:
+    """logits (B, V) -> (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        top, _ = jax.lax.top_k(logits, cfg.top_k)
+        kth = top[..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the serving substrate's compute hot spots.
+
+ELIS itself is a scheduling-layer contribution (no kernel in the paper); the
+kernels here are the perf-critical layers of the serving substrate it drives:
+prefill flash-attention, decode flash-attention (the decode_32k/long_500k hot
+spot), and the Mamba2 SSD scan.  Each has a pure-jnp oracle in ``ref.py``.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,234 @@
+"""Pallas flash-decode kernel: single-token attention over a long KV cache.
+
+The decode-phase hot spot: one query token per sequence attending to a KV
+cache of up to 512k entries.  The kernel blocks over the KV axis
+(grid = (batch, heads, num_kv_blocks), trailing axis sequential) with online
+softmax statistics in VMEM scratch — the TPU analogue of flash-decoding's
+split-K, with the partial-reduction carried through sequential grid steps
+instead of an inter-SM reduction pass.
+
+Per-sequence dynamic state (valid cache length, absolute query position)
+arrives via scalar prefetch (SMEM) so slots at different generation depths
+batch together — exactly what ELIS's continuous batching produces.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    kv_len_ref, q_off_ref,  # scalar-prefetch (SMEM): (B,) each
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    block_k: int,
+    n_kv_blocks: int,
+    window: Optional[int],
+):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # (1, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (BK, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T) * scale  # (1, BK)
+    kv_len = kv_len_ref[bi]
+    q_pos = q_off_ref[bi]
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = (k_pos < kv_len) & (k_pos <= q_pos)
+    if window is not None:
+        mask &= k_pos > (q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+    m_ref[...] = m_cur
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def _decode_kernel_int8(
+    kv_len_ref, q_off_ref,  # scalar-prefetch (SMEM)
+    q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    block_k: int,
+    n_kv_blocks: int,
+    window: Optional[int],
+):
+    """int8-KV variant: K/V blocks arrive quantized with per-token fp32
+    scales (the §Perf serving recipe); dequantization is fused into the
+    block load — HBM traffic is the int8 bytes, VMEM holds the fp32 tile."""
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # (1, D)
+    ksc = ks_ref[0, :].astype(jnp.float32)     # (BK,)
+    vsc = vs_ref[0, :].astype(jnp.float32)
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ksc[:, None]
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vsc[:, None]
+
+    s = jnp.dot(q, k.T) * scale
+    kv_len = kv_len_ref[bi]
+    q_pos = q_off_ref[bi]
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = (k_pos < kv_len) & (k_pos <= q_pos)
+    if window is not None:
+        mask &= k_pos > (q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+    m_ref[...] = m_cur
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_decode_int8(
+    q: jnp.ndarray,        # (B, 1, H, D)
+    k: jnp.ndarray,        # (B, L, KH, D) int8
+    v: jnp.ndarray,        # int8
+    k_scale: jnp.ndarray,  # (B, L) fp32
+    v_scale: jnp.ndarray,
+    *,
+    kv_len: jnp.ndarray,
+    q_offset: jnp.ndarray,
+    window: Optional[int] = None,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    assert sq == 1 and k.dtype == jnp.int8
+    L, kh = k.shape[1], k.shape[2]
+    rep = h // kh
+    block_k = min(block_k, L)
+    assert L % block_k == 0, (L, block_k)
+    n_k = L // block_k
+    scale = 1.0 / math.sqrt(d)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+
+    kernel = functools.partial(
+        _decode_kernel_int8, scale=scale, block_k=block_k, n_kv_blocks=n_k,
+        window=window,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ki, *_: (b_, 0, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda b_, h_, ki, *_: (b_, ki, h_ // rep, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda b_, h_, ki, *_: (b_, ki, h_ // rep, 0)),
+            pl.BlockSpec((1, block_k), lambda b_, h_, ki, *_: (b_, ki)),
+            pl.BlockSpec((1, block_k), lambda b_, h_, ki, *_: (b_, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda b_, h_, ki, *_: (b_, 0, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, d), q.dtype),
+        interpret=interpret,
+    )(kv_len, q_offset, q, k, v, k_scale, v_scale)
+
+
+def flash_decode(
+    q: jnp.ndarray,  # (B, 1, H, D)
+    k: jnp.ndarray,  # (B, L, KH, D)
+    v: jnp.ndarray,
+    *,
+    kv_len: jnp.ndarray,  # (B,) or scalar
+    q_offset: jnp.ndarray,  # (B,) or scalar
+    window: Optional[int] = None,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    assert sq == 1
+    L, kh = k.shape[1], k.shape[2]
+    rep = h // kh
+    block_k = min(block_k, L)
+    assert L % block_k == 0, (L, block_k)
+    n_k = L // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=scale,
+        block_k=block_k,
+        n_kv_blocks=n_k,
+        window=window,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ki, *_: (b_, 0, h_, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda b_, h_, ki, *_: (b_, ki, h_ // rep, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda b_, h_, ki, *_: (b_, ki, h_ // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda b_, h_, ki, *_: (b_, 0, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, d), q.dtype),
+        interpret=interpret,
+    )(kv_len, q_offset, q, k, v)

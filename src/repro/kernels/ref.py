@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Skv, KH, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,
+    kv_len=None,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    rep = h // kh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_off = jnp.asarray(q_offset)
+    q_pos = (jnp.arange(sq)[None, :] + q_off.reshape(-1, 1))[:, None, :, None]
+    k_pos = jnp.arange(skv)[None, None, None, :]
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > (q_pos - window)
+    if kv_len is not None:
+        mask &= k_pos < jnp.asarray(kv_len).reshape(-1, 1, 1, 1)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def reference_decode_attention(
+    q: jnp.ndarray,  # (B, 1, H, D)
+    k: jnp.ndarray,  # (B, L, KH, D)
+    v: jnp.ndarray,
+    *,
+    kv_len: jnp.ndarray,  # (B,)
+    q_offset: jnp.ndarray,  # (B,)
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    return reference_attention(q, k, v, causal=True, window=window,
+                               q_offset=q_offset, kv_len=kv_len)
+
+
+def reference_ssd(x, a, Bm, Cm, chunk: int):
+    """Chunked SSD oracle — delegates to the model-zoo reference."""
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, a, Bm, Cm, chunk)

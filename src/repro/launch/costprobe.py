@@ -1,0 +1,158 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline cost probes: exact HLO costs despite rolled layer scans.
+
+XLA's ``cost_analysis`` counts a while-loop body once, so the production
+lowering (scan-stacked layers) under-reports FLOPs/bytes/collectives by
+~n_layers.  We lower *probe variants* — same input shapes, reduced layer
+counts, scans fully unrolled — and extrapolate the affine cost model:
+
+  dense/moe/vlm/ssm : cost(L) = a + L·b             probes L ∈ {2, 4}
+  audio (enc-dec)   : cost(k) = a + k·b (enc=dec=k) probes k ∈ {2, 4}
+  hybrid (zamba2)   : cost = a + G·g + T·t          probes L ∈ {12, 15, 24}
+                      (G groups of [6 mamba + shared attn], T tail mamba)
+
+The SSD chunk recurrence is fully vectorised (no scan), so probe costs are
+exact per layer.  Corrected totals are written to experiments/costmodel/.
+Approximation notes: zamba2's shared attention is SWA(4096) so per-group
+cost is ~shape-independent of depth; extrapolation is exact for everything
+else because layers are homogeneous.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, List
+
+from repro.configs import get_config, list_archs
+from repro.launch.shapes import SHAPES, supported
+from repro.models.scanning import unrolled
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "costmodel")
+
+KEYS = ("flops", "bytes_accessed", "collective_bytes")
+
+
+def _extract(rec: Dict) -> Dict[str, float]:
+    return {
+        "flops": rec["flops"],
+        "bytes_accessed": rec["bytes_accessed"],
+        "collective_bytes": rec["collectives"]["total"],
+    }
+
+
+def _axpy(a: Dict, b: Dict, sa=1.0, sb=1.0) -> Dict:
+    return {k: sa * a[k] + sb * b[k] for k in KEYS}
+
+
+def _probe_cfgs(cfg) -> List:
+    r = dataclasses.replace
+    if cfg.family == "audio":
+        return [
+            r(cfg, n_layers=2, encoder=r(cfg.encoder, n_layers=2)),
+            r(cfg, n_layers=4, encoder=r(cfg.encoder, n_layers=4)),
+        ]
+    if cfg.family == "hybrid":
+        return [r(cfg, n_layers=12), r(cfg, n_layers=15), r(cfg, n_layers=24)]
+    return [r(cfg, n_layers=2), r(cfg, n_layers=4)]
+
+
+def _extrapolate(cfg, costs: List[Dict]) -> Dict[str, float]:
+    if cfg.family == "audio":
+        c2, c4 = costs
+        per = _axpy(c4, c2, 0.5, -0.5)  # per (enc+dec) layer pair
+        return _axpy(c2, per, 1.0, cfg.n_layers - 2)
+    if cfg.family == "hybrid":
+        c12, c15, c24 = costs
+        # L=12 -> 2 groups, L=24 -> 4 groups: per-group = (c24 - c12) / 2
+        g = _axpy(c24, c12, 0.5, -0.5)             # per group (6 mamba + attn)
+        t = _axpy(c15, c12, 1 / 3.0, -1 / 3.0)     # per tail mamba layer
+        a = _axpy(c12, g, 1.0, -2.0)
+        every = cfg.hybrid.attn_every
+        n_groups = cfg.n_layers // every
+        n_tail = cfg.n_layers - n_groups * every
+        out = _axpy(a, g, 1.0, float(n_groups))
+        return _axpy(out, t, 1.0, float(n_tail))
+    c2, c4 = costs
+    per = _axpy(c4, c2, 0.5, -0.5)
+    return _axpy(c2, per, 1.0, cfg.n_layers - 2)
+
+
+def probe(arch: str, shape_name: str, *, moe_scheme: str = "tensor",
+          remat: bool = True, tag: str = "", **perf_knobs) -> Dict:
+    """``perf_knobs`` forward to lower_one (kv_dtype, kv_shard,
+    params_data_sharded, mesh_shape) so §Perf variants get corrected costs."""
+    from repro.launch.dryrun import lower_one
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not supported(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "status": "skipped"}
+    t0 = time.time()
+    costs = []
+    probes_meta = []
+    with unrolled():
+        for pc in _probe_cfgs(cfg):
+            rec = lower_one(arch, shape_name, False, moe_scheme=moe_scheme,
+                            remat=remat, cfg_override=pc, save_record=False,
+                            **perf_knobs)
+            if rec["status"] != "ok":
+                return {"arch": arch, "shape": shape_name, "status": "error",
+                        "error": rec.get("error")}
+            costs.append(_extract(rec))
+            probes_meta.append({"n_layers": pc.n_layers, **costs[-1]})
+    corrected = _extrapolate(cfg, costs)
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "single",
+        "moe_scheme": moe_scheme,
+        "tag": tag,
+        "status": "ok",
+        "perf_knobs": {k: str(v) for k, v in perf_knobs.items()},
+        "probe_seconds": round(time.time() - t0, 1),
+        "probes": probes_meta,
+        "corrected": corrected,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(OUT_DIR, f"{arch}_{shape_name}_single{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moe-scheme", default="tensor")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    archs = list(list_archs()) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    for arch in archs:
+        for shape in shapes:
+            try:
+                rec = probe(arch, shape, moe_scheme=args.moe_scheme,
+                            tag=args.tag)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                print(f"FAIL {arch} x {shape}: {e!r}")
+                continue
+            if rec["status"] == "ok":
+                c = rec["corrected"]
+                print(f"OK   {arch} x {shape}: flops={c['flops']:.3e} "
+                      f"bytes={c['bytes_accessed']:.3e} "
+                      f"coll={c['collective_bytes']:.3e} "
+                      f"({rec['probe_seconds']}s)")
+            else:
+                print(f"{rec['status'].upper()} {arch} x {shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+For each combination this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. lowers the appropriate step (train_step / prefill_step / serve_step)
+     with abstract inputs (ShapeDtypeStruct — zero allocation) and the
+     partition rules from ``repro.launch.partition``,
+  3. compiles it (SPMD — proves the sharding config is coherent),
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     (parsed from the optimized HLO) into experiments/dryrun/*.json —
+     the §Roofline inputs.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.launch import partition as PT
+from repro.launch import steps as ST
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.shapes import SHAPES, InputShape, input_specs, supported
+from repro.models import transformer as T
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 0.125, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-operand bytes of every collective op in the optimized HLO.
+
+    HLO lines look like ``%ag = bf16[16,1024]{1,0} all-gather(...)`` (or a
+    tuple ``= (bf16[..], bf16[..]) all-reduce(...)``); we account the output
+    shapes, which equal the per-device bytes moved into the network for
+    all-reduce and the received bytes for gather-style ops.
+    """
+    out = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("//"):
+            continue
+        m = re.search(r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)", stripped)
+        if not m:
+            continue
+        shapes_part, op = m.group(1), m.group(2)
+        if op + "-start" in stripped:
+            pass  # async start carries the payload; done-ops parse to 0 anyway
+        total = 0.0
+        for dt, dims in _SHAPE_RE.findall(shapes_part):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[op] += total
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes", "peak_memory_in_bytes")
+    d = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            d[k] = float(v)
+    if not d and isinstance(mem, dict):
+        d = {k: float(v) for k, v in mem.items()}
+    return d
+
+
+def _cost_dict(cost) -> Dict[str, float]:
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return {k: float(v) for k, v in dict(cost).items()
+            if isinstance(v, (int, float))}
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              *, moe_scheme: str = "tensor", remat: bool = True,
+              extra_tag: str = "", cfg_override=None,
+              save_record: bool = True, kv_dtype=None,
+              kv_shard: str = "auto", params_data_sharded: bool = False,
+              mesh_shape=None, attn_head_shard: bool = False) -> Dict:
+    """Lower + compile one combination; returns the record dict.
+
+    ``cfg_override``: substitute architecture config (cost probes lower
+    reduced-layer unrolled variants with identical input shapes).
+    §Perf knobs: ``kv_dtype="int8"`` (quantized cache), ``kv_shard``
+    ("auto"|"seq"|"head_dim"|"heads"), ``params_data_sharded`` (ZeRO-3-style
+    weight sharding for memory-bound decode), ``mesh_shape`` e.g. (8, 32).
+    """
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    if not supported(cfg, shape):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "long_500k unsupported (see DESIGN.md)"}
+
+    if mesh_shape is not None:
+        import numpy as _np
+        from jax.sharding import Mesh as _Mesh
+
+        devs = jax.devices()[: int(_np.prod(mesh_shape))]
+        mesh = _Mesh(_np.asarray(devs).reshape(mesh_shape),
+                     ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    bax = batch_axes(mesh)
+    abstract_params = T.abstract_params(cfg)
+    pspec = PT.param_pspecs(cfg, abstract_params, moe_scheme=moe_scheme)
+    if params_data_sharded:
+        pspec = PT.opt_pspecs(mesh, pspec, abstract_params)
+    specs = input_specs(cfg, shape, kv_dtype=kv_dtype)
+
+    t0 = time.time()
+    import contextlib
+
+    from repro.models.layers import attn_head_sharding
+
+    hint = (attn_head_sharding("model") if attn_head_shard
+            else contextlib.nullcontext())
+    with mesh, hint:
+        pspec = PT.sanitize_specs(mesh, pspec, abstract_params)
+        if shape.kind == "train":
+            step = ST.make_train_step(cfg, remat=remat)
+            opt_abstract = ST.abstract_opt_state(abstract_params)
+            # ZeRO-1: moments sharded over the data axes as well
+            mspec = PT.opt_pspecs(mesh, pspec, abstract_params)
+            opt_spec = ST.AdamWState(step=PT.P(), mu=mspec, nu=mspec)
+            bspec = PT.batch_pspecs(specs, bax)
+            bspec = PT.sanitize_specs(mesh, bspec, specs)
+            lowered = jax.jit(
+                step,
+                in_shardings=(PT.shardings(mesh, pspec),
+                              PT.shardings(mesh, opt_spec),
+                              PT.shardings(mesh, bspec)),
+                donate_argnums=(0, 1),
+            ).lower(abstract_params, opt_abstract, specs)
+        elif shape.kind == "prefill":
+            step = ST.make_prefill_step(cfg)
+            cache_abstract = specs["cache"]
+            msize = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+            cspec = PT.cache_pspecs(cfg, cache_abstract, bax,
+                                    model_size=msize, kv_shard=kv_shard)
+            bspec = PT.batch_pspecs(
+                {k: v for k, v in specs.items() if k != "cache"}, bax)
+            bspec["cache"] = cspec
+            bspec = PT.sanitize_specs(mesh, bspec, specs)
+            lowered = jax.jit(
+                step,
+                in_shardings=(PT.shardings(mesh, pspec),
+                              PT.shardings(mesh, bspec)),
+            ).lower(abstract_params, specs)
+        else:  # decode
+            step = ST.make_serve_step(cfg)
+            ctx_par = shape.global_batch < 16
+            cache_abstract = specs["cache"]
+            msize = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+            cspec = PT.cache_pspecs(cfg, cache_abstract, bax,
+                                    context_parallel=ctx_par,
+                                    model_size=msize, kv_shard=kv_shard)
+            cspec = PT.sanitize_specs(mesh, cspec, cache_abstract)
+            tok_spec = PT.P(None if ctx_par else bax, None)
+            tok = specs["tokens"]
+            tok_spec = PT.sanitize_specs(mesh, tok_spec, tok)
+            lowered = jax.jit(
+                step,
+                in_shardings=(PT.shardings(mesh, pspec),
+                              PT.shardings(mesh, tok_spec),
+                              PT.shardings(mesh, cspec)),
+                donate_argnums=(2,),
+            ).lower(abstract_params, tok, cache_abstract)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = _mem_dict(compiled.memory_analysis())
+    cost = _cost_dict(compiled.cost_analysis())
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": int(mesh.devices.size),
+        "moe_scheme": moe_scheme,
+        "remat": remat,
+        "kv_dtype": kv_dtype,
+        "kv_shard": kv_shard,
+        "params_data_sharded": params_data_sharded,
+        "attn_head_shard": attn_head_shard,
+        "mesh_shape": list(mesh.devices.shape),
+        "tag": extra_tag,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if k in ("flops", "bytes accessed",
+                                   "bytes accessed operand 0",
+                                   "bytes accessed output", "transcendentals",
+                                   "optimal_seconds")},
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collectives": coll,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    return rec
+
+
+def save(rec: Dict, out_dir: str = OUT_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"_{rec['tag']}" if rec.get("tag") else ""
+    path = os.path.join(
+        out_dir, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{tag}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(list_archs()))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape)")
+    ap.add_argument("--moe-scheme", default="tensor",
+                    choices=["tensor", "expert"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--kv-dtype", default=None, choices=[None, "int8"])
+    ap.add_argument("--kv-shard", default="auto",
+                    choices=["auto", "seq", "head_dim", "heads"])
+    ap.add_argument("--params-data-sharded", action="store_true")
+    ap.add_argument("--attn-head-shard", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override single-pod mesh, e.g. 8,32")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+    mesh_shape = (tuple(int(x) for x in args.mesh_shape.split(","))
+                  if args.mesh_shape else None)
+
+    archs = list(list_archs()) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                label = f"{arch} × {shape} × {'multi' if mp else 'single'}"
+                try:
+                    rec = lower_one(arch, shape, mp,
+                                    moe_scheme=args.moe_scheme,
+                                    remat=not args.no_remat,
+                                    extra_tag=args.tag,
+                                    kv_dtype=args.kv_dtype,
+                                    kv_shard=args.kv_shard,
+                                    params_data_sharded=args.params_data_sharded,
+                                    mesh_shape=mesh_shape,
+                                    attn_head_shard=args.attn_head_shard)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "tag": args.tag, "status": "error",
+                           "error": repr(e)}
+                    n_fail += 1
+                path = save(rec, args.out)
+                if rec["status"] == "ok":
+                    print(f"OK   {label}: compile={rec['compile_s']}s "
+                          f"flops={rec['flops']:.3e} "
+                          f"coll={rec['collectives']['total']:.3e}B -> {path}")
+                    print("     mem:", rec["memory_analysis"])
+                elif rec["status"] == "skipped":
+                    print(f"SKIP {label}: {rec['reason']}")
+                else:
+                    print(f"FAIL {label}: {rec['error']}")
+    if n_fail:
+        raise SystemExit(f"{n_fail} combinations failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches JAX device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+
+TPU v5e hardware constants used by the roofline analysis live here too.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+# TPU v5e per-chip constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run via "
+            "repro.launch.dryrun (sets xla_force_host_platform_device_count)"
+        )
+    try:
+        return jax.make_mesh(shape, axes, devices=devices[:n])
+    except TypeError:  # older make_mesh without devices kwarg
+        from jax.sharding import Mesh
+
+        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,232 @@
+"""Logical-axis → PartitionSpec rules (t5x-style, path-pattern driven).
+
+Baseline sharding scheme (hillclimbed in EXPERIMENTS.md §Perf):
+  * batch            → ("pod", "data") (or ("data",) single-pod)
+  * vocab / heads / ffn-hidden / ssm-inner → "model"  (tensor parallelism,
+    including *within each expert* for MoE — experts replicated; the
+    expert-parallel alternative is a §Perf experiment)
+  * long-context decode (global_batch < data axis): KV-cache sequence axis
+    → "data" (context parallelism), batch replicated
+  * layer-stack axes, norms, embed width → replicated
+
+Specs are derived structurally: every param/cache leaf is matched by the
+name path produced by the same init functions, so new modules fail loudly.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"#{e.idx}")
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+        else:
+            names.append(str(e))
+    return tuple(names)
+
+
+#: leaf-name -> (logical ndim, spec tail) — leading stacked axes padded None
+_PARAM_RULES: Dict[str, Tuple[int, Tuple]] = {
+    "embed": (2, ("model", None)),        # (vocab, d)
+    "lm_head": (2, (None, "model")),      # (d, vocab)
+    "pos_embed": (2, (None, None)),
+    "enc_pos": (2, (None, None)),
+    "wq": (2, (None, "model")),
+    "wk": (2, (None, "model")),
+    "wv": (2, (None, "model")),
+    "wo": (2, ("model", None)),
+    "bq": (1, ("model",)),
+    "bk": (1, ("model",)),
+    "bv": (1, ("model",)),
+    "w_gate": (2, (None, "model")),
+    "w_up": (2, (None, "model")),
+    "w_down": (2, ("model", None)),
+    "router": (2, (None, None)),
+    "gate": (2, (None, None)),            # shared-expert sigmoid gate (d, 1)
+    "scale": (1, (None,)),
+    "bias": (1, (None,)),
+    "in_proj": (2, (None, "model")),
+    "conv_w": (2, ("model", None)),
+    "conv_b": (1, ("model",)),
+    "A_log": (1, ("model",)),
+    "dt_bias": (1, ("model",)),
+    "D": (1, ("model",)),
+    "norm": (1, ("model",)),              # ssm gated-norm weight (d_inner,)
+    "out_proj": (2, ("model", None)),
+}
+
+#: MoE expert tensors have an extra leading expert axis (replicated in the
+#: baseline tensor-parallel-experts scheme)
+_MOE_RULES: Dict[str, Tuple[int, Tuple]] = {
+    "w_gate": (3, (None, None, "model")),
+    "w_up": (3, (None, None, "model")),
+    "w_down": (3, (None, "model", None)),
+}
+
+#: beyond-baseline: expert-parallel scheme (experts on "model", §Perf)
+_MOE_EXPERT_PARALLEL: Dict[str, Tuple[int, Tuple]] = {
+    "w_gate": (3, ("model", None, None)),
+    "w_up": (3, ("model", None, None)),
+    "w_down": (3, ("model", None, None)),
+}
+
+
+def param_pspecs(cfg, abstract_params=None, *, moe_scheme: str = "tensor") -> Any:
+    """PartitionSpec tree congruent with ``init_params(cfg)``."""
+    if abstract_params is None:
+        abstract_params = T.abstract_params(cfg)
+    moe_rules = (_MOE_EXPERT_PARALLEL if moe_scheme == "expert"
+                 else _MOE_RULES)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        in_moe = "moe" in names and "shared" not in names
+        table = moe_rules if (in_moe and name in moe_rules) else _PARAM_RULES
+        if name not in table:
+            raise KeyError(f"no partition rule for param path {names}")
+        ndim, tail = table[name]
+        pad = leaf.ndim - ndim
+        assert pad >= 0, (names, leaf.ndim, ndim)
+        return P(*((None,) * pad + tuple(tail)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+def cache_pspecs(cfg, abstract_cache, batch_ax,
+                 *, context_parallel: bool = False,
+                 model_size: int = 16, kv_shard: str = "auto") -> Any:
+    """PartitionSpec tree for the decode cache.
+
+    ``context_parallel``: shard the KV sequence axis on "data" instead of the
+    batch axis (long_500k with global_batch=1).
+
+    When ``n_kv_heads % model_size != 0`` the head axis cannot split the
+    model axis; replicating KV there is catastrophic at 32k context (e.g.
+    qwen1.5-32b: 5.5 TB of KV → 364 GB/device).  The baseline then shards the
+    *sequence* axis on "model" instead (sequence-parallel KV, what TPU
+    serving stacks do for MHA-KV models).
+    """
+    heads_fit = cfg.n_kv_heads > 0 and cfg.n_kv_heads % model_size == 0
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name == "len":
+            return P() if context_parallel else P(batch_ax)
+        if len(names) >= 2 and names[-2] in ("kv", "cross_kv"):
+            if leaf.ndim == 3:  # quantized-KV scales: (sites, B, L)
+                if context_parallel:
+                    return P(None, None, "data")
+                if kv_shard == "seq" or (kv_shard == "auto" and not heads_fit):
+                    return P(None, batch_ax, "model")
+                return P(None, batch_ax, None)
+            # KVCache value buffers: (sites, B, L, KH, hd)
+            if context_parallel:
+                return P(None, None, "data", "model", None)
+            if kv_shard == "head_dim":
+                return P(None, batch_ax, None, None, "model")
+            if kv_shard == "seq" or (kv_shard == "auto" and not heads_fit):
+                return P(None, batch_ax, "model", None, None)
+            return P(None, batch_ax, None, "model", None)
+        if name == "conv":  # (..., B, CH, k)
+            pad = leaf.ndim - 3
+            bax = None if context_parallel else batch_ax
+            return P(*((None,) * pad), bax, "model", None)
+        if name == "ssm":  # (..., B, H, P, N)
+            pad = leaf.ndim - 4
+            bax = None if context_parallel else batch_ax
+            return P(*((None,) * pad), bax, "model", None, None)
+        raise KeyError(f"no partition rule for cache path {names}")
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_cache)
+
+
+def batch_pspecs(batch_abstract, batch_ax) -> Any:
+    """Specs for token/label/embeds/frames inputs."""
+
+    def spec_for(path, leaf):
+        name = _path_names(path)[-1]
+        if name == "positions":  # (3, B, S)
+            return P(None, batch_ax, None)
+        if name in ("embeds", "frames"):  # (B, S, d)
+            return P(batch_ax, None, None)
+        return P(batch_ax, None)  # tokens / labels (B, S)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_abstract)
+
+
+def opt_pspecs(mesh, param_spec_tree, abstract_params):
+    """ZeRO-1: optimizer moments additionally sharded over the batch axes.
+
+    For every param spec, the first dimension not already sharded (and
+    divisible) picks up the ("pod","data") axes.  Parameters themselves stay
+    TP-only (they are needed every step); AdamW moments are touched once per
+    step, so sharding them over data costs one reduce-scatter/all-gather pair
+    but divides their footprint by the data-parallel degree — without it a
+    32B model's f32 moments (17.6 GB/device at TP=16) cannot fit v5e HBM.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dax = tuple(a for a in ("pod", "data") if a in sizes)
+    ddeg = 1
+    for a in dax:
+        ddeg *= sizes[a]
+
+    def fix(spec, leaf):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        for dim, ax in enumerate(entries):
+            if ax is None and leaf.shape[dim] % ddeg == 0 and leaf.shape[dim] > 0:
+                entries[dim] = dax if len(dax) > 1 else dax[0]
+                break
+        return P(*entries)
+
+    return jax.tree_util.tree_map(
+        fix, param_spec_tree, abstract_params,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def sanitize_specs(mesh, spec_tree, abstract_tree):
+    """Drop (replicate) spec entries whose dimension is not divisible by the
+    mesh-axis size — e.g. kv_heads=2 cannot split 16-way model parallelism,
+    so KV is replicated across the model axis (the real GQA-TP behaviour).
+    The roofline table surfaces the cost; §Perf hillclimbs it."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, leaf):
+        entries = []
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                entries.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            entries.append(ax if leaf.shape[dim] % n == 0 else None)
+        # pad missing trailing dims as replicated
+        return P(*entries)
+
+    return jax.tree_util.tree_map(
+        lambda s, l: fix(s, l), spec_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def shardings(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

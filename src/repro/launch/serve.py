@@ -1,0 +1,148 @@
+"""Serving launcher — the Kubernetes-pod entrypoint analogue.
+
+Assembles the full ELIS stack from CLI args: N backend workers (each an
+InferenceEngine on the selected ``--arch``, reduced configs on CPU), the
+frontend scheduler with the chosen policy, and either a trace file from
+``repro.launch.generate`` or a synthetic stream.
+
+    python -m repro.launch.serve --arch qwen2-1.5b --policy isrtf \
+        --workers 2 --trace trace.jsonl
+    python -m repro.launch.serve --arch mamba2-130m --policy isrtf --n 12
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.core import (
+    BGEPredictor,
+    ELISFrontend,
+    FrontendConfig,
+    Job,
+    OraclePredictor,
+    PredictorConfig,
+    PreemptionConfig,
+    SchedulerConfig,
+    summarize,
+)
+from repro.data import GammaArrivals, WorkloadGenerator
+from repro.engine import EngineConfig, EngineExecutor, InferenceEngine
+from repro.models import init_params
+from repro.models.encoder import EncoderArchConfig
+from repro.training import latest_step, restore_checkpoint
+
+
+def load_jobs(args):
+    if args.trace:
+        jobs = []
+        for line in open(args.trace):
+            r = json.loads(line)
+            jobs.append(Job(
+                job_id=r["request_id"], prompt=r["prompt"],
+                prompt_tokens=r["prompt_tokens"],
+                arrival_time=r["arrival_time"],
+                true_output_len=min(r.get("max_tokens", args.max_output),
+                                    args.max_output),
+            ))
+        return jobs
+    gen = WorkloadGenerator(seed=args.seed)
+    rng = np.random.RandomState(args.seed)
+    times = GammaArrivals().rate_scaled(args.rate).sample_arrival_times(
+        args.n, rng)
+    jobs = []
+    for i, t in enumerate(times):
+        r = gen.sample_request()
+        jobs.append(Job(job_id=i, prompt=r.prompt,
+                        prompt_tokens=r.prompt_tokens,
+                        arrival_time=float(t),
+                        true_output_len=min(r.true_output_len,
+                                            args.max_output)))
+    return jobs
+
+
+def build_predictor(args):
+    if args.predictor == "oracle":
+        return OraclePredictor()
+    cfg = PredictorConfig(
+        encoder=EncoderArchConfig(d_model=128, n_heads=4, n_layers=3,
+                                  d_ff=256, max_len=192),
+        n_fc_layers=8, fc_hidden=256, max_len=192,
+    )
+    pred = BGEPredictor(cfg, seed=0)
+    if args.predictor_ckpt:
+        step = latest_step(args.predictor_ckpt)
+        if step is None:
+            sys.exit(f"no checkpoint in {args.predictor_ckpt}")
+        pred.params, _ = restore_checkpoint(args.predictor_ckpt, step,
+                                            pred.params)
+    return pred
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list(list_archs()))
+    ap.add_argument("--policy", default="isrtf",
+                    choices=["fcfs", "sjf", "isrtf", "mlfq"])
+    ap.add_argument("--predictor", default="oracle",
+                    choices=["oracle", "bge"])
+    ap.add_argument("--predictor-ckpt", default=None,
+                    help="restore a trained BGE predictor (train_predictor.py)")
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--max-output", type=int, default=32)
+    ap.add_argument("--trace", default=None)
+    ap.add_argument("--n", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=1.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-preemption", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    print(f"[serve] {args.workers} worker(s) x {args.slots} slots, "
+          f"{cfg.arch_id}, policy={args.policy}", file=sys.stderr)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engines = {
+        n: InferenceEngine(cfg, params, EngineConfig(
+            max_slots=args.slots, max_len=512, max_output=args.max_output,
+            eos_id=-1, respect_job_max=True))
+        for n in range(args.workers)
+    }
+    predictor = (None if args.policy in ("fcfs", "mlfq")
+                 else build_predictor(args))
+    frontend = ELISFrontend(
+        FrontendConfig(
+            n_nodes=args.workers,
+            scheduler=SchedulerConfig(policy=args.policy, window=args.window,
+                                      batch_size=args.slots),
+            preemption=PreemptionConfig(enabled=not args.no_preemption),
+        ),
+        predictor,
+        EngineExecutor(engines),
+    )
+    jobs = load_jobs(args)
+    for j in jobs:
+        frontend.submit(j)
+    done = frontend.run()
+    for j in sorted(done, key=lambda j: j.job_id):
+        print(json.dumps({
+            "request_id": j.job_id,
+            "node": j.node,
+            "n_tokens": j.tokens_generated,
+            "jct_s": round(j.jct(), 3),
+            "queuing_delay_s": round(j.queuing_delay, 3),
+            "preemptions": j.n_preemptions,
+        }))
+    m = summarize(done)
+    print(f"[serve] mean JCT {m['jct_mean']:.2f}s  queue "
+          f"{m['queuing_delay_mean']:.2f}s  throughput "
+          f"{m['throughput_rps']:.2f} req/s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

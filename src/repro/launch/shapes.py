@@ -1,0 +1,111 @@
+"""The four assigned input shapes and per-(arch, shape) abstract inputs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, zero allocation.  Decode shapes
+lower ``serve_step`` (ONE token + a KV cache of seq_len); train lowers the
+full optimizer step; prefill lowers the prompt pass.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+#: long_500k carve-in window for pure full-attention archs (DESIGN.md §4)
+LONG_CONTEXT_WINDOW = 8192
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    s.name: s
+    for s in [
+        InputShape("train_4k", 4_096, 256, "train"),
+        InputShape("prefill_32k", 32_768, 32, "prefill"),
+        InputShape("decode_32k", 32_768, 128, "decode"),
+        InputShape("long_500k", 524_288, 1, "decode"),
+    ]
+}
+
+
+def supported(cfg, shape: InputShape) -> bool:
+    """The one skip: whisper's decoder is positionally bounded (448)."""
+    if shape.name == "long_500k" and cfg.long_context_mode == "unsupported":
+        return False
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _decoder_seq(cfg, seq_len: int) -> int:
+    """Whisper's decoder length is architecturally capped."""
+    if cfg.family == "audio":
+        return min(seq_len, cfg.max_position_embeddings)
+    return seq_len
+
+
+def input_specs(cfg, shape: InputShape, *, kv_dtype: Optional[str] = None) -> Dict:
+    """Abstract batch (+ cache for decode) for one (arch, shape) pair.
+
+    ``kv_dtype="int8"`` builds the quantized-KV cache variant (§Perf).
+    """
+    b = shape.global_batch
+    s = _decoder_seq(cfg, shape.seq_len)
+    tok = jnp.int32
+    out: Dict = {}
+
+    if shape.kind == "train":
+        text_s = s
+        if cfg.family == "vlm":
+            text_s = s - cfg.frontend_tokens
+            out["embeds"] = _sds((b, cfg.frontend_tokens, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+            out["positions"] = _sds((3, b, s), tok)
+        if cfg.family == "audio":
+            out["frames"] = _sds((b, cfg.encoder.n_frames, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+        out["tokens"] = _sds((b, text_s), tok)
+        out["labels"] = _sds((b, s), tok)
+        return out
+
+    if shape.kind == "prefill":
+        text_s = s
+        if cfg.family == "vlm":
+            text_s = s - cfg.frontend_tokens
+            out["embeds"] = _sds((b, cfg.frontend_tokens, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+            out["positions"] = _sds((3, b, s), tok)
+        if cfg.family == "audio":
+            out["frames"] = _sds((b, cfg.encoder.n_frames, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+        out["tokens"] = _sds((b, text_s), tok)
+        out["cache"] = T.abstract_cache(cfg, b, s,
+                                        sliding_window=_window(cfg, shape),
+                                        kv_dtype=kv_dtype)
+        return out
+
+    # decode
+    out["tokens"] = _sds((b, 1), tok)
+    out["cache"] = T.abstract_cache(cfg, b, shape.seq_len,
+                                    sliding_window=_window(cfg, shape),
+                                    kv_dtype=kv_dtype)
+    return out
+
+
+def _window(cfg, shape: InputShape) -> Optional[int]:
+    """Sliding-window carve-in: only for long_500k on full-attention archs."""
+    if shape.name == "long_500k" and cfg.long_context_mode == "sliding_window":
+        return LONG_CONTEXT_WINDOW
+    return None

@@ -1,0 +1,68 @@
+"""Step functions lowered by the dry-run (and runnable on real hardware).
+
+  train_step(params, opt_state, batch) -> (params, opt_state, loss)
+  prefill_step(params, batch_with_cache) -> (logits, cache)
+  serve_step(params, tokens, cache) -> (next_token, cache)   # ONE new token
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.objective import loss_fn
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update
+
+DRYRUN_OPT = AdamWConfig(lr=3e-4, schedule="cosine", warmup_steps=100,
+                         total_steps=10_000)
+
+
+def make_train_step(cfg, *, remat: bool = True, moe_impl: str = "dense",
+                    opt_cfg: AdamWConfig = DRYRUN_OPT):
+    def _loss(params, batch):
+        return loss_fn(params, cfg, batch, moe_impl=moe_impl, remat=remat)
+
+    def train_step(params, opt_state: AdamWState, batch: Dict):
+        (l, metrics), grads = jax.value_and_grad(_loss, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, _ = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, l
+
+    return train_step
+
+
+def make_prefill_step(cfg, *, moe_impl: str = "dense"):
+    def prefill_step(params, batch: Dict):
+        batch = dict(batch)
+        cache = batch.pop("cache")
+        return T.prefill(params, cfg, batch, cache, moe_impl=moe_impl)
+
+    return prefill_step
+
+
+def make_serve_step(cfg, *, moe_impl: str = "dense"):
+    """One-token decode; returns the sampled (greedy) token, not the logits,
+    so the step's output footprint matches a real serving system."""
+
+    def serve_step(params, tokens: jnp.ndarray, cache):
+        logits, cache = T.decode_step(params, cfg, tokens, cache,
+                                      moe_impl=moe_impl)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def abstract_opt_state(abstract_params) -> AdamWState:
+    f32like = lambda t: jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), t
+    )
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=f32like(abstract_params),
+        nu=f32like(abstract_params),
+    )

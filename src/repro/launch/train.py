@@ -1,0 +1,120 @@
+"""Training launcher for any assigned architecture.
+
+On CPU this trains the reduced variant for real; with ``--dry-run`` it
+lowers+compiles the FULL config's train step on the production mesh instead
+(delegating to repro.launch.dryrun) — the same entrypoint a TPU job would use.
+
+    python -m repro.launch.train --arch yi-6b --steps 100
+    python -m repro.launch.train --arch yi-6b --dry-run --mesh multi
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.data import WorkloadGenerator
+from repro.models import init_params, loss_fn
+from repro.training import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def batches(cfg, batch_size, seq_len, seed=0):
+    gen = WorkloadGenerator(seed=seed)
+    buf = []
+    while True:
+        while len(buf) < batch_size * (seq_len + 1):
+            r = gen.sample_request()
+            buf.extend(t % cfg.vocab_size for t in r.prompt_tokens)
+            buf.extend(t % cfg.vocab_size for t in r.output_tokens)
+        chunk = np.asarray(buf[: batch_size * (seq_len + 1)], np.int32)
+        buf = buf[batch_size * (seq_len + 1):]
+        chunk = chunk.reshape(batch_size, seq_len + 1)
+        batch = {"tokens": jnp.asarray(chunk[:, :-1]),
+                 "labels": jnp.asarray(chunk[:, 1:])}
+        if cfg.family == "vlm":
+            batch["embeds"] = jnp.zeros((batch_size, cfg.frontend_tokens,
+                                         cfg.d_model))
+            batch["labels"] = jnp.pad(batch["labels"],
+                                      ((0, 0), (cfg.frontend_tokens, 0)),
+                                      constant_values=-1)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros((batch_size, cfg.encoder.n_frames,
+                                         cfg.d_model))
+        yield batch
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list(list_archs()))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the FULL config on the production mesh")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # delegate: the dry-run module must own the XLA device-count env var
+        os.execvp(sys.executable, [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", args.arch, "--shape", "train_4k", "--mesh", args.mesh,
+        ])
+
+    cfg = get_config(args.arch).reduced()
+    print(f"[train] {cfg.arch_id}: {cfg.param_count()/1e6:.1f}M params, "
+          f"batch {args.batch} x seq {args.seq}")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    opt_state = adamw_init(params)
+    start = 0
+    if args.resume and args.ckpt:
+        step0 = latest_step(args.ckpt)
+        if step0 is not None:
+            params, meta = restore_checkpoint(args.ckpt, step0, params)
+            start = step0
+            print(f"[train] resumed from step {step0}")
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        (l, aux), grads = jax.value_and_grad(
+            lambda p, b: loss_fn(p, cfg, b, remat=True), has_aux=True
+        )(params, batch)
+        params, opt_state, metrics = adamw_update(opt_cfg, grads, opt_state,
+                                                  params)
+        return params, opt_state, l, metrics["grad_norm"]
+
+    it = batches(cfg, args.batch, args.seq)
+    t0 = time.time()
+    for i in range(start, start + args.steps):
+        params, opt_state, loss, gnorm = step_fn(params, opt_state, next(it))
+        if i % args.log_every == 0 or i == start + args.steps - 1:
+            print(f"step {i:5d}  loss {float(loss):7.4f}  "
+                  f"gnorm {float(gnorm):8.3f}  {time.time()-t0:5.0f}s")
+    if args.ckpt:
+        path = save_checkpoint(args.ckpt, start + args.steps, params,
+                               metadata={"loss": float(loss),
+                                         "arch": args.arch})
+        print(f"[train] checkpoint: {path}")
+
+
+if __name__ == "__main__":
+    main()

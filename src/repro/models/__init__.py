@@ -1,0 +1,22 @@
+"""Model zoo: assigned architectures + the predictor encoder."""
+from repro.models.transformer import (
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    prefill,
+)
+from repro.models.objective import loss_fn
+
+__all__ = [
+    "abstract_cache",
+    "abstract_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "prefill",
+]

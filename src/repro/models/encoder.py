@@ -1,0 +1,96 @@
+"""BGE-style bidirectional transformer encoder (the predictor backbone).
+
+Mirrors BAAI/bge-base-en-v1.5 structurally: token + learned position
+embeddings, post-LN transformer encoder layers (MHA, GELU MLP), CLS token at
+position 0, mean pooling over valid tokens.  Scaled down by default for CPU
+training — the architecture class (frozen encoder + FC head) is what the paper
+relies on, not the 110M-parameter checkpoint (see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclass(frozen=True)
+class EncoderArchConfig:
+    vocab_size: int = 8192
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    max_len: int = 512
+    dtype: str = "float32"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+#: full-size variant matching bge-base-en-v1.5 (for the dry-run / docs)
+BGE_BASE = EncoderArchConfig(
+    vocab_size=30522, d_model=768, n_heads=12, n_layers=12, d_ff=3072,
+    max_len=512,
+)
+
+
+def init_encoder(key, cfg: EncoderArchConfig) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+
+    def layer_init(k):
+        k1, k2, k3, k4, k5 = jax.random.split(k, 5)
+        d = cfg.d_model
+        return {
+            "wq": L.dense_init(k1, d, d, dtype),
+            "wk": L.dense_init(k2, d, d, dtype),
+            "wv": L.dense_init(k3, d, d, dtype),
+            "wo": L.dense_init(k4, d, d, dtype),
+            "attn_norm": L.init_layernorm(d, dtype),
+            "mlp": L.init_mlp(k5, d, cfg.d_ff, False, dtype),
+            "mlp_norm": L.init_layernorm(d, dtype),
+        }
+
+    keys = jax.random.split(ks[2], cfg.n_layers)
+    return {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "pos": L.embed_init(ks[1], cfg.max_len, cfg.d_model, dtype),
+        "layers": jax.vmap(layer_init)(keys),
+        "final_norm": L.init_layernorm(cfg.d_model, dtype),
+    }
+
+
+def encode(params: Dict, cfg: EncoderArchConfig, tokens: jnp.ndarray,
+           mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) int32, mask (B, S) bool ->
+    (cls (B, d), mean_pooled (B, d))."""
+    b, s = tokens.shape
+    h = params["embed"][tokens] + params["pos"][None, :s]
+
+    def body(x, lp):
+        hh = x
+        q = (hh @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = (hh @ lp["wk"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        v = (hh @ lp["wv"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+            jnp.float32(cfg.head_dim)
+        )
+        scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, -1)
+        x = L.layernorm(lp["attn_norm"], x + out @ lp["wo"])  # post-LN
+        mlp_out = jax.nn.gelu(x @ lp["mlp"]["w_up"]) @ lp["mlp"]["w_down"]
+        x = L.layernorm(lp["mlp_norm"], x + mlp_out)
+        return x, None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = L.layernorm(params["final_norm"], h)
+    cls = h[:, 0, :]
+    m = mask[..., None].astype(h.dtype)
+    mean = jnp.sum(h * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    return cls, mean

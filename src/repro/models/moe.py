@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN (Mixtral / Qwen2-MoE style).
+
+TPU adaptation: expert dispatch is expressed as dense einsums over a
+``(tokens, experts)`` combine matrix rather than gather/scatter, which maps
+onto the MXU and shards cleanly with experts on the ``model`` mesh axis
+(expert parallelism).  The router aux loss follows the Switch/Mixtral
+load-balancing formulation.
+
+Two paths:
+  * ``moe_block_dense`` — einsum dispatch, every expert computes every token
+    masked by combine weights.  Exact, differentiable, used for training and
+    for the dry-run (XLA shards the expert axis; tokens are NOT replicated
+    per-expert in memory thanks to the contracting einsum).
+  * ``moe_block_grouped`` — top-k gather + segment compute; cheaper on small
+    decode batches.  Used by the engine on CPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_moe(key, cfg, dtype=jnp.float32) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    e = m.num_experts
+
+    def stack_init(k, shape):
+        return jax.random.uniform(k, shape, dtype, -1.0, 1.0) / jnp.sqrt(
+            jnp.asarray(shape[-2], dtype)
+        )
+
+    p: Params = {
+        "router": dense_init(ks[0], d, e, dtype),
+        "w_gate": stack_init(ks[1], (e, d, m.expert_d_ff)),
+        "w_up": stack_init(ks[2], (e, d, m.expert_d_ff)),
+        "w_down": stack_init(ks[3], (e, m.expert_d_ff, d)),
+    }
+    if m.num_shared_experts:
+        sk = jax.random.split(ks[4], 4)
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], d, m.shared_d_ff, dtype),
+            "w_up": dense_init(sk[1], d, m.shared_d_ff, dtype),
+            "w_down": dense_init(sk[2], m.shared_d_ff, d, dtype),
+            # qwen2-moe gates the shared path with a sigmoid scalar gate
+            "gate": dense_init(sk[3], d, 1, dtype),
+        }
+    return p
+
+
+def router_probs(p: Params, cfg, x: jnp.ndarray):
+    """x (T, d) -> (probs (T, E), topk_weights (T, K), topk_idx (T, K))."""
+    m = cfg.moe
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_i = jax.lax.top_k(probs, m.top_k)
+    if m.norm_topk_prob:
+        topk_w = topk_w / jnp.clip(jnp.sum(topk_w, -1, keepdims=True), 1e-9)
+    return probs, topk_w, topk_i
+
+
+def load_balance_loss(probs: jnp.ndarray, topk_i: jnp.ndarray, num_experts: int):
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    T = probs.shape[0]
+    counts = jnp.zeros((num_experts,), jnp.float32).at[topk_i.reshape(-1)].add(1.0)
+    frac_tokens = counts / jnp.maximum(T * topk_i.shape[-1], 1)
+    frac_probs = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def moe_block_dense(p: Params, cfg, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense-dispatch MoE.  x (B, S, d) -> (out, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    probs, topk_w, topk_i = router_probs(p, cfg, xt)
+    # combine[t, e] = routing weight of expert e for token t (0 if unrouted)
+    combine = jnp.zeros((b * s, m.num_experts), xt.dtype)
+    combine = combine.at[jnp.arange(b * s)[:, None], topk_i].set(
+        topk_w.astype(xt.dtype)
+    )
+    # Expert compute: contract tokens against each expert's weights, weight by
+    # combine.  einsum keeps the expert axis explicit -> shards on "model".
+    h_gate = jnp.einsum("td,edf->tef", xt, p["w_gate"])
+    h_up = jnp.einsum("td,edf->tef", xt, p["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    out = jnp.einsum("tef,efd,te->td", h, p["w_down"], combine)
+    aux = load_balance_loss(probs, topk_i, m.num_experts)
+    out = out.reshape(b, s, d)
+    if "shared" in p:
+        sp = p["shared"]
+        sh = (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+        gate = jax.nn.sigmoid(x @ sp["gate"])
+        out = out + gate * sh
+    return out, aux
+
+
+def moe_block_grouped(p: Params, cfg, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather-based top-k MoE for small batches (decode path).
+
+    Computes only the selected experts per token via vmapped gather of expert
+    weights.  Numerically identical to the dense path.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    probs, topk_w, topk_i = router_probs(p, cfg, xt)
+
+    def per_token(xv, wks, iks):
+        wg = p["w_gate"][iks]  # (K, d, f)
+        wu = p["w_up"][iks]
+        wd = p["w_down"][iks]  # (K, f, d)
+        h = jax.nn.silu(jnp.einsum("d,kdf->kf", xv, wg)) * jnp.einsum(
+            "d,kdf->kf", xv, wu
+        )
+        y = jnp.einsum("kf,kfd->kd", h, wd)
+        return jnp.sum(y * wks[:, None].astype(y.dtype), axis=0)
+
+    out = jax.vmap(per_token)(xt, topk_w, topk_i).reshape(b, s, d)
+    aux = load_balance_loss(probs, topk_i, m.num_experts)
+    if "shared" in p:
+        sp = p["shared"]
+        sh = (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+        gate = jax.nn.sigmoid(x @ sp["gate"])
+        out = out + gate * sh
+    return out, aux
+
+
+def moe_block(p: Params, cfg, x: jnp.ndarray, *, impl: str = "dense"):
+    if impl == "grouped":
+        return moe_block_grouped(p, cfg, x)
+    return moe_block_dense(p, cfg, x)

@@ -1,0 +1,45 @@
+"""Training objective: next-token cross-entropy (+ MoE aux loss)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean masked token-level CE.  labels < 0 are also ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = mask & (labels >= 0)
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    return jnp.sum(jnp.where(mask, nll, 0.0)) / denom
+
+
+def loss_fn(params, cfg, batch: Dict, *, attn_impl: str = "xla",
+            moe_impl: str = "dense", remat: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = T.forward(params, cfg, batch, attn_impl=attn_impl,
+                            moe_impl=moe_impl, remat=remat)
+    labels = batch["labels"]
+    # VLM: stub patch positions carry no labels; logits cover [patches|text]
+    if logits.shape[1] != labels.shape[1]:
+        extra = logits.shape[1] - labels.shape[1]
+        pad = jnp.full(labels.shape[:1] + (extra,), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, dtype=bool)
+    elif mask.shape[1] != labels.shape[1]:
+        extra = labels.shape[1] - mask.shape[1]
+        mask = jnp.concatenate(
+            [jnp.zeros(mask.shape[:1] + (extra,), bool), mask], axis=1
+        )
+    ce = cross_entropy(logits, labels, mask)
+    total = ce + cfg.moe.router_aux_weight * aux if cfg.moe.enabled else ce
+    return total, {"ce": ce, "aux": aux}

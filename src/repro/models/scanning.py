@@ -1,0 +1,30 @@
+"""Layer-scan control.
+
+``lax.scan`` keeps HLO small (essential for 512-way SPMD compiles), but XLA's
+``cost_analysis`` counts a while-loop body ONCE regardless of trip count.
+The roofline cost probes therefore lower small-layer-count variants with
+scans fully unrolled (``unrolled()`` context) and extrapolate per-layer
+costs; production lowering keeps rolled scans.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_UNROLL = False
+
+
+@contextlib.contextmanager
+def unrolled():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def layer_scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length, unroll=_UNROLL)

@@ -1,0 +1,315 @@
+"""Mamba2 (State Space Duality) block — pure JAX reference implementation.
+
+TPU adaptation: the CUDA selective-scan of Mamba1 is replaced by Mamba2's SSD
+*chunked* formulation (arXiv:2405.21060 §6): within a chunk the recurrence is
+computed as dense attention-like matmuls (MXU-friendly), and chunks are linked
+by a tiny sequential state carry (``lax.scan`` over n_chunks).  The Pallas
+kernel in ``repro/kernels/ssm_scan.py`` blocks the same computation into VMEM
+tiles; this module is the oracle.
+
+Block structure (Mamba2):
+    u -> in_proj -> [z | x | B | C | dt]
+    (x,B,C) -> causal depthwise conv1d -> silu
+    y = SSD(x * dt, dt * A, B, C) + D * x
+    out = out_proj( RMSNorm(y) * silu(z) )    # gated norm
+
+State for decode:
+    conv_state: (B, conv_ch, d_conv - 1)   last raw conv inputs
+    ssm_state:  (B, n_heads, head_dim, d_state)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def conv_channels(cfg) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+
+
+def init_ssm(key, cfg, dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    nh = cfg.ssm_n_heads
+    g = s.n_groups
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * di + 2 * g * s.d_state + nh  # z, x, B, C, dt
+    lo, hi = s.a_init_range
+    a = jax.random.uniform(ks[2], (nh,), jnp.float32, lo, hi)
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, dtype),
+        "conv_w": jax.random.normal(ks[1], (conv_channels(cfg), s.d_conv), dtype)
+        * 0.1,
+        "conv_b": jnp.zeros((conv_channels(cfg),), dtype),
+        "A_log": jnp.log(a),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[3], di, d, dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# SSD chunked scan (reference)
+# --------------------------------------------------------------------------- #
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a (..., c) -> (..., c, c) with out[t, s] = sum_{s < r <= t} a[r]
+    (lower-triangular; -inf above diagonal)."""
+    c = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    out = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, S, H, P)  already multiplied by dt
+    a: jnp.ndarray,  # (B, S, H)     log decay per step = dt * A  (negative)
+    Bm: jnp.ndarray,  # (B, S, H, N)
+    Cm: jnp.ndarray,  # (B, S, H, N)
+    chunk: int,
+    initial_state: jnp.ndarray = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def tochunk(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc, ac, bc, cc = map(tochunk, (x, a, Bm, Cm))
+    ac = jnp.moveaxis(ac, -1, 2)  # (B, nc, H, c)
+    a_cum = jnp.cumsum(ac, axis=-1)  # (B, nc, H, c)
+
+    # intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(ac))  # (B, nc, H, c, c)
+    y_diag = jnp.einsum("bzthn,bzshn,bzhts,bzshp->bzthp", cc, bc, L, xc)
+
+    # states at the end of each chunk
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B, nc, H, c)
+    states = jnp.einsum("bzshn,bzhs,bzshp->bzhpn", bc, decay_states, xc)
+
+    # inter-chunk carry, fully vectorised (TPU-friendly: one (nc+1)² decay
+    # matrix instead of a sequential scan — also keeps XLA cost analysis
+    # exact, since while-loop bodies are otherwise counted only once)
+    chunk_log_decay = a_cum[..., -1]  # (B, nc, H)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), x.dtype)
+    # stack initial state as the "chunk -1" contribution with log-decay 0
+    cum = jnp.cumsum(chunk_log_decay, axis=1)  # (B, nc, H)
+    cum0 = jnp.pad(cum, ((0, 0), (1, 0), (0, 0)))  # (B, nc+1, H): cum before z
+    # M[z, w] = exp(cum0[z] - cum0[w+1]) for w < z : decay applied to chunk
+    # w's end-state when it reaches the start of chunk z
+    expo = cum0[:, :, None, :] - cum0[:, None, 1:, :]  # (B, nc+1(z), nc(w), H)
+    zi = jnp.arange(nc + 1)[:, None]
+    wi = jnp.arange(nc)[None, :]
+    valid = wi < zi  # strict: chunk w finished before chunk z starts
+    M = jnp.where(valid[None, :, :, None], jnp.exp(
+        jnp.where(valid[None, :, :, None], expo, 0.0)), 0.0)
+    all_prev = jnp.einsum("bzwh,bwhpn->bzhpn", M.astype(states.dtype), states)
+    # initial-state contribution decays through every prior chunk
+    init_decay = jnp.exp(cum0)  # (B, nc+1, H)
+    all_prev = all_prev + init_decay[..., None, None].astype(
+        states.dtype) * initial_state[:, None]
+    prev_states = all_prev[:, :nc]  # state at the START of each chunk
+    final_state = all_prev[:, nc]
+
+    # inter-chunk (off-diagonal) contribution
+    state_decay_out = jnp.exp(a_cum)  # (B, nc, H, c)
+    y_off = jnp.einsum("bzthn,bzhpn,bzht->bzthp", cc, prev_states,
+                       state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+# --------------------------------------------------------------------------- #
+# Block forward / decode
+# --------------------------------------------------------------------------- #
+
+
+def _split_proj(cfg, proj: jnp.ndarray):
+    di = cfg.ssm_d_inner
+    g = cfg.ssm.n_groups
+    n = cfg.ssm.d_state
+    nh = cfg.ssm_n_heads
+    z, xin, bm, cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1
+    )
+    assert dt.shape[-1] == nh
+    return z, xin, bm, cm, dt
+
+
+def _causal_conv(p: Params, seq: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (B, S, CH)."""
+    w = p["conv_w"]  # (CH, K)
+    k = w.shape[-1]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    # windowed dot, k is small (4) so unroll: out[t] = sum_j w[j] * x[t+j-(k-1)]
+    out = sum(
+        pad[:, j : j + seq.shape[1], :] * w[:, j][None, None, :] for j in range(k)
+    )
+    return out + p["conv_b"][None, None, :]
+
+
+def _heads(cfg, xin, bm, cm):
+    b, s, _ = xin.shape
+    nh, hd = cfg.ssm_n_heads, cfg.ssm.head_dim
+    g, n = cfg.ssm.n_groups, cfg.ssm.d_state
+    xh = xin.reshape(b, s, nh, hd)
+    bmh = bm.reshape(b, s, g, n)
+    cmh = cm.reshape(b, s, g, n)
+    rep = nh // g
+    bmh = jnp.repeat(bmh, rep, axis=2)
+    cmh = jnp.repeat(cmh, rep, axis=2)
+    return xh, bmh, cmh
+
+
+def _gated_out(p: Params, cfg, y: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(var + 1e-5) * p["norm"].astype(jnp.float32)
+    out = (yn * jax.nn.silu(z.astype(jnp.float32))).astype(y.dtype)
+    return out @ p["out_proj"]
+
+
+def ssm_forward(p: Params, cfg, x: jnp.ndarray, *, impl: str = "xla",
+                return_state: bool = False):
+    """Full-sequence Mamba2 block. x (B, S, d_model) -> (B, S, d_model).
+
+    With ``return_state`` the second return value is the full decode state
+    ({"conv", "ssm"}) so prefill can hand off to ``ssm_decode_step`` exactly.
+    """
+    b, s, _ = x.shape
+    proj = x @ p["in_proj"]
+    z, xin, bm, cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, bm, cm], axis=-1)
+    tail = cfg.ssm.d_conv - 1
+    if s >= tail:
+        conv_tail = jnp.moveaxis(conv_in[:, s - tail :, :], 1, 2)
+    else:
+        conv_tail = jnp.pad(
+            jnp.moveaxis(conv_in, 1, 2), ((0, 0), (0, 0), (tail - s, 0))
+        )
+    conv_out = jax.nn.silu(_causal_conv(p, conv_in))
+    di = cfg.ssm_d_inner
+    gn = cfg.ssm.n_groups * cfg.ssm.d_state
+    xin, bm, cm = jnp.split(conv_out, [di, di + gn], axis=-1)
+    xh, bmh, cmh = _heads(cfg, xin, bm, cm)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    a_log = dt * A[None, None, :]
+    x_dt = xh * dt[..., None].astype(xh.dtype)
+
+    chunk = min(cfg.ssm.chunk_size, s)
+    # pad sequence to a multiple of chunk
+    pad = (-s) % chunk
+    if pad:
+        x_dt = jnp.pad(x_dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        bmh = jnp.pad(bmh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmh = jnp.pad(cmh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        y, final_state = kops.ssd_scan(x_dt, a_log.astype(jnp.float32), bmh,
+                                       cmh, chunk=chunk)
+    else:
+        y, final_state = ssd_chunked(x_dt, a_log.astype(x_dt.dtype), bmh, cmh,
+                                     chunk)
+    if pad:
+        y = y[:, :s]
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(b, s, di)
+    out = _gated_out(p, cfg, y, z)
+    if return_state:
+        return out, {"conv": conv_tail, "ssm": final_state}
+    return out, final_state
+
+
+def init_ssm_state(cfg, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "conv": jnp.zeros((batch, conv_channels(cfg), cfg.ssm.d_conv - 1), dtype),
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_n_heads, cfg.ssm.head_dim, cfg.ssm.d_state), dtype
+        ),
+    }
+
+
+def ssm_decode_step(p: Params, cfg, x: jnp.ndarray, state: Dict):
+    """Single-token recurrent step.  x (B, 1, d_model)."""
+    b = x.shape[0]
+    proj = x[:, 0, :] @ p["in_proj"]  # (B, proj)
+    z, xin, bm, cm, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xin, bm, cm], axis=-1)  # (B, CH)
+    conv_hist = jnp.concatenate(
+        [state["conv"], conv_in[:, :, None]], axis=-1
+    )  # (B, CH, d_conv)
+    w = p["conv_w"]  # (CH, K)
+    conv_out = jnp.einsum("bck,ck->bc", conv_hist, w) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_state = conv_hist[:, :, 1:]
+
+    di = cfg.ssm_d_inner
+    gn = cfg.ssm.n_groups * cfg.ssm.d_state
+    xin, bm, cm = jnp.split(conv_out, [di, di + gn], axis=-1)
+    nh, hd = cfg.ssm_n_heads, cfg.ssm.head_dim
+    g, n = cfg.ssm.n_groups, cfg.ssm.d_state
+    xh = xin.reshape(b, nh, hd)
+    bmh = jnp.repeat(bm.reshape(b, g, n), nh // g, axis=1)
+    cmh = jnp.repeat(cm.reshape(b, g, n), nh // g, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A[None, :])  # (B, H)
+
+    h = state["ssm"]
+    h = h * da[:, :, None, None].astype(h.dtype) + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xh, bmh, dt.astype(xh.dtype)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, cmh)
+    y = y + xh * p["D"][None, :, None].astype(xh.dtype)
+    y = y.reshape(b, 1, di)
+    out = _gated_out(p, cfg, y, z[:, None, :])
+    return out, {"conv": new_conv_state, "ssm": h}
+
+
+def ssd_reference_sequential(x, a, Bm, Cm, initial_state=None):
+    """O(S) sequential recurrence — ground truth for tests.
+
+    x (B,S,H,P) pre-multiplied by dt; a (B,S,H) log decay; Bm/Cm (B,S,H,N).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), x.dtype)
+
+    def step(hprev, inp):
+        xt, at, bt, ct = inp
+        hnew = hprev * jnp.exp(at)[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt, bt
+        )
+        yt = jnp.einsum("bhpn,bhn->bhp", hnew, ct)
+        return hnew, yt
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(a, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    final, ys = jax.lax.scan(step, initial_state, xs)
+    return jnp.moveaxis(ys, 0, 1), final

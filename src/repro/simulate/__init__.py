@@ -1,0 +1,27 @@
+from repro.simulate.executor import SimExecutor
+from repro.simulate.profiles import (
+    PROFILES,
+    SCHED_OVERHEAD_MS,
+    ModelProfile,
+    avg_request_rate,
+)
+from repro.simulate.runner import (
+    ExperimentConfig,
+    compare_policies,
+    make_predictor,
+    requests_to_jobs,
+    run_experiment,
+)
+
+__all__ = [
+    "ExperimentConfig",
+    "ModelProfile",
+    "PROFILES",
+    "SCHED_OVERHEAD_MS",
+    "SimExecutor",
+    "avg_request_rate",
+    "compare_policies",
+    "make_predictor",
+    "requests_to_jobs",
+    "run_experiment",
+]

@@ -1,0 +1,93 @@
+"""Discrete-event cluster executor.
+
+Implements the frontend's ``Executor`` protocol with virtual time and the
+calibrated latency model.  Replays each job's pre-generated response token
+stream (the simulator never invents tokens — ground truth lives with the
+workload generator), tracks per-node KV residency for preemption/recompute
+accounting, and enforces the Appendix-A memory capacity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Set
+
+from repro.core.frontend import ExecResult
+from repro.core.job import Job
+from repro.simulate.profiles import SCHED_OVERHEAD_MS, ModelProfile
+
+
+@dataclass
+class SimExecutor:
+    profile: ModelProfile
+    #: include the paper's measured 11.04 ms scheduling overhead per iteration
+    sched_overhead_s: float = SCHED_OVERHEAD_MS / 1000.0
+    #: cap on resident KV tokens per node (None = Appendix-A capacity)
+    kv_capacity_tokens: int = None
+
+    _resident: Dict[int, Set[int]] = field(default_factory=dict)
+    _resident_tokens: Dict[int, Dict[int, int]] = field(default_factory=dict)
+    mem_preemptions: int = 0
+
+    def __post_init__(self):
+        if self.kv_capacity_tokens is None:
+            self.kv_capacity_tokens = self.profile.kv_capacity_tokens()
+
+    # ------------------------------------------------------------------ #
+    def evict(self, node: int, job: Job) -> None:
+        self._resident.setdefault(node, set()).discard(job.job_id)
+        self._resident_tokens.setdefault(node, {}).pop(job.job_id, None)
+
+    def resident_token_count(self, node: int) -> int:
+        return sum(self._resident_tokens.get(node, {}).values())
+
+    # ------------------------------------------------------------------ #
+    def execute(self, node: int, jobs: Sequence[Job], window: int,
+                now: float) -> ExecResult:
+        res = self._resident.setdefault(node, set())
+        res_toks = self._resident_tokens.setdefault(node, {})
+        b = len(jobs)
+
+        prefill_ms = 0.0
+        for job in jobs:
+            if job.job_id not in res:
+                # cold start or resumed-after-preemption: recompute the KV
+                # cache for everything generated so far (vLLM recompute mode)
+                n = len(job.prompt_tokens) + job.tokens_generated
+                prefill_ms += self.profile.prefill_ms(b, n)
+                res.add(job.job_id)
+                res_toks[job.job_id] = n
+
+        tokens_out: List[List[int]] = []
+        finished: List[bool] = []
+        max_new = 0
+        for job in jobs:
+            remaining = job.true_output_len - job.tokens_generated
+            n_new = min(window, remaining)
+            start = job.tokens_generated
+            tokens_out.append(job.output_tokens[start : start + n_new])
+            finished.append(n_new >= remaining)
+            res_toks[job.job_id] = res_toks.get(job.job_id, 0) + n_new
+            max_new = max(max_new, n_new)
+
+        decode_ms = max_new * self.profile.decode_ms(b)
+        duration = self.sched_overhead_s + (prefill_ms + decode_ms) / 1000.0
+
+        # Appendix-A memory pressure: if resident KV exceeds capacity, evict
+        # the largest non-batch residents (counted as memory preemptions)
+        total = sum(res_toks.values())
+        if total > self.kv_capacity_tokens:
+            batch_ids = {j.job_id for j in jobs}
+            evictable = sorted(
+                ((t, jid) for jid, t in res_toks.items()
+                 if jid not in batch_ids),
+                reverse=True,
+            )
+            for t, jid in evictable:
+                if total <= self.kv_capacity_tokens:
+                    break
+                res.discard(jid)
+                res_toks.pop(jid)
+                total -= t
+                self.mem_preemptions += 1
+
+        return ExecResult(duration, tokens_out, finished)

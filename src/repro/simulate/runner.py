@@ -1,0 +1,135 @@
+"""Experiment runner: workload -> frontend -> metrics (paper §6 harness)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (
+    ELISFrontend,
+    FrontendConfig,
+    Job,
+    NoisyOraclePredictor,
+    OraclePredictor,
+    PreemptionConfig,
+    SchedulerConfig,
+    summarize,
+)
+from repro.data.arrivals import GammaArrivals
+from repro.data.workload import Request, WorkloadGenerator
+from repro.simulate.executor import SimExecutor
+from repro.simulate.profiles import PROFILES, ModelProfile, avg_request_rate
+
+
+def requests_to_jobs(requests: List[Request]) -> List[Job]:
+    return [
+        Job(
+            job_id=r.request_id,
+            prompt=r.prompt,
+            prompt_tokens=r.prompt_tokens,
+            arrival_time=r.arrival_time,
+            true_output_len=r.true_output_len,
+            output_tokens=r.output_tokens,
+        )
+        for r in requests
+    ]
+
+
+@dataclass
+class ExperimentConfig:
+    model: str = "lam13"
+    policy: str = "isrtf"
+    n_requests: int = 200         # paper: 200 prompts per experiment
+    n_nodes: int = 1
+    batch_size: int = 4           # paper Table 5: batch size 4
+    rps_multiple: float = 1.0     # multiple of AVG.RequestRate
+    window: int = 50
+    predictor: str = "noisy_oracle"  # oracle | noisy_oracle | bge
+    seed: int = 0
+    aging_rate: float = 0.0
+    preemption: PreemptionConfig = field(default_factory=PreemptionConfig)
+    #: override arrival rate directly (req/s); None = rps_multiple formula
+    rate_override: Optional[float] = None
+    #: hardware speed multiplier (Fig 7 uses H100s: see profiles.H100_SPEEDUP)
+    hw_speedup: float = 1.0
+
+
+def make_predictor(kind: str, seed: int = 0, bge=None):
+    if kind == "oracle":
+        return OraclePredictor()
+    if kind == "noisy_oracle":
+        return NoisyOraclePredictor(seed=seed)
+    if kind == "bge":
+        if bge is None:
+            raise ValueError("pass a trained BGEPredictor via bge=")
+        return bge
+    if kind == "none":
+        return None
+    raise ValueError(kind)
+
+
+def run_experiment(cfg: ExperimentConfig, *, bge=None,
+                   requests: Optional[List[Request]] = None) -> Dict[str, float]:
+    profile = PROFILES[cfg.model]
+    if cfg.hw_speedup != 1.0:
+        profile = profile.scaled(cfg.hw_speedup)
+    rng = np.random.RandomState(cfg.seed)
+
+    if requests is None:
+        gen = WorkloadGenerator(seed=cfg.seed)
+        requests = gen.sample_requests(cfg.n_requests)
+    rate = cfg.rate_override
+    if rate is None:
+        rate = avg_request_rate(profile, cfg.batch_size) * cfg.rps_multiple
+        rate *= cfg.n_nodes
+    arrivals = GammaArrivals().rate_scaled(rate)
+    times = arrivals.sample_arrival_times(len(requests), rng)
+    for r, t in zip(requests, times):
+        r.arrival_time = float(t)
+
+    predictor = make_predictor(cfg.predictor, seed=cfg.seed + 1, bge=bge)
+    fe_cfg = FrontendConfig(
+        n_nodes=cfg.n_nodes,
+        scheduler=SchedulerConfig(
+            policy=cfg.policy, window=cfg.window, batch_size=cfg.batch_size,
+            aging_rate=cfg.aging_rate,
+        ),
+        preemption=cfg.preemption,
+    )
+    executor = SimExecutor(profile)
+    frontend = ELISFrontend(fe_cfg, predictor, executor)
+    jobs = requests_to_jobs(requests)
+    for j in jobs:
+        frontend.submit(j)
+    done = frontend.run()
+    assert len(done) == len(jobs), (len(done), len(jobs))
+    m = summarize(done)
+    m["mem_preemptions"] = executor.mem_preemptions
+    return m
+
+
+def compare_policies(base_cfg: ExperimentConfig, policies=("fcfs", "isrtf", "sjf"),
+                     *, bge=None, n_trials: int = 3) -> Dict[str, Dict]:
+    """Paper §6.2: same sampled prompts, shuffled per trial, 3 repeats."""
+    import dataclasses
+
+    out: Dict[str, Dict] = {}
+    for pol in policies:
+        trials = []
+        for t in range(n_trials):
+            cfg = dataclasses.replace(
+                base_cfg,
+                policy=pol,
+                seed=base_cfg.seed + 1000 * t,
+                predictor="oracle" if pol == "sjf" else base_cfg.predictor,
+            )
+            trials.append(run_experiment(cfg, bge=bge))
+        agg = {
+            k: float(np.mean([tr[k] for tr in trials]))
+            for k in trials[0]
+        }
+        agg["jct_mean_min"] = float(np.min([tr["jct_mean"] for tr in trials]))
+        agg["jct_mean_max"] = float(np.max([tr["jct_mean"] for tr in trials]))
+        out[pol] = agg
+    return out

@@ -1,0 +1,30 @@
+from repro.training.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    schedule_lr,
+)
+from repro.training.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.loop import make_train_step, train
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "latest_step",
+    "make_train_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "schedule_lr",
+    "train",
+]

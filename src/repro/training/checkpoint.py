@@ -1,0 +1,85 @@
+"""Msgpack + numpy checkpointing for arbitrary JAX pytrees.
+
+Layout: a directory per step containing ``tree.msgpack`` (structure +
+small leaves) and ``arrays.npz`` (bulk tensors).  Restores to host numpy;
+callers re-shard via ``jax.device_put`` with their NamedSharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    metadata: Optional[Dict] = None, keep: int = 3) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(jax.device_get(tree))
+    np.savez(
+        os.path.join(tmp, "arrays.npz"),
+        **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)},
+    )
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(
+            {
+                "step": step,
+                "treedef": str(treedef),
+                "n_leaves": len(leaves),
+                "metadata": metadata or {},
+            },
+            f,
+        )
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    _gc(ckpt_dir, keep)
+    return path
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+        and not d.endswith(".tmp")
+    )
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, target: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``target`` (shapes validated)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(meta["n_leaves"])]
+    t_leaves, treedef = _flatten(target)
+    if len(t_leaves) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, target {len(t_leaves)}"
+        )
+    for i, (a, b) in enumerate(zip(leaves, t_leaves)):
+        if tuple(a.shape) != tuple(np.shape(b)):
+            raise ValueError(f"leaf {i} shape {a.shape} != target {np.shape(b)}")
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta["metadata"]

@@ -1,0 +1,71 @@
+"""Generic training loop used by both the LM example and the predictor."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+)
+
+
+def make_train_step(
+    loss_fn: Callable,
+    opt_cfg: AdamWConfig,
+    *,
+    trainable_mask: Optional[Any] = None,
+    donate: bool = True,
+):
+    """loss_fn(params, batch) -> (loss, metrics_dict).
+
+    Returns jitted ``step(params, opt_state, batch) ->
+    (params, opt_state, metrics)``.
+    """
+
+    def step(params, opt_state: AdamWState, batch):
+        (loss, inner), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, grads, opt_state, params, trainable_mask=trainable_mask
+        )
+        metrics = {"loss": loss, **inner, **opt_metrics}
+        return params, opt_state, metrics
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)
+
+
+def train(
+    params: Any,
+    loss_fn: Callable,
+    data_iter: Iterable,
+    opt_cfg: AdamWConfig,
+    *,
+    num_steps: int,
+    trainable_mask: Optional[Any] = None,
+    log_every: int = 50,
+    log_fn: Callable[[int, Dict], None] = None,
+) -> Tuple[Any, Dict]:
+    """Run ``num_steps`` of AdamW over ``data_iter``.  Returns
+    (params, history) where history maps step -> host metrics."""
+    step_fn = make_train_step(loss_fn, opt_cfg, trainable_mask=trainable_mask)
+    opt_state = adamw_init(params)
+    history: Dict[int, Dict] = {}
+    t0 = time.time()
+    for i in range(num_steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == num_steps - 1:
+            host = {k: float(v) for k, v in metrics.items()}
+            host["wall_s"] = time.time() - t0
+            history[i] = host
+            if log_fn:
+                log_fn(i, host)
+    return params, history

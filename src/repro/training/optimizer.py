@@ -1,0 +1,133 @@
+"""Pure-JAX optimizers and LR schedules (no optax dependency).
+
+AdamW with decoupled weight decay, global-norm gradient clipping, and
+warmup-cosine scheduling — the standard LLM training stack.  Optimizer state
+is a pytree congruent with the parameters, so it shards identically under
+pjit (ZeRO-style sharding falls out of the partition rules).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    #: schedule: constant | cosine | linear
+    schedule: str = "cosine"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        decay = 1.0 - (1.0 - cfg.min_lr_ratio) * frac
+    else:  # cosine
+        frac = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * 0.5 * (
+            1.0 + jnp.cos(math.pi * frac)
+        )
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), t
+    )
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                      nu=zeros(params))
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    *,
+    trainable_mask: Optional[Any] = None,
+) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    """Returns (new_params, new_state, metrics).
+
+    ``trainable_mask``: pytree of bools congruent with params; False leaves
+    are left untouched (the paper freezes the BGE encoder and trains only the
+    FC head — this is how).
+    """
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, t):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        newp = p.astype(jnp.float32) - lr * delta
+        newp = jnp.where(t, newp, p.astype(jnp.float32)).astype(p.dtype)
+        m = jnp.where(t, m, 0.0)
+        v = jnp.where(t, v, 0.0)
+        return newp, m, v
+
+    if trainable_mask is None:
+        trainable_mask = jax.tree_util.tree_map(lambda _: True, params)
+    flat = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu,
+                                  trainable_mask)
+    # unzip the 3-tuples
+    newp = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return newp, AdamWState(step=step, mu=newm, nu=newv), metrics

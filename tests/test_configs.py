@@ -1,0 +1,77 @@
+"""Config registry and per-arch invariants."""
+import pytest
+
+from repro.configs import get_config, list_archs
+
+EXPECTED = {
+    "qwen2-vl-7b": dict(family="vlm", n_layers=28, d_model=3584, n_heads=28,
+                        n_kv_heads=4, d_ff=18944, vocab_size=152064),
+    "yi-6b": dict(family="dense", n_layers=32, d_model=4096, n_heads=32,
+                  n_kv_heads=4, d_ff=11008, vocab_size=64000),
+    "mamba2-130m": dict(family="ssm", n_layers=24, d_model=768,
+                        vocab_size=50280),
+    "mixtral-8x7b": dict(family="moe", n_layers=32, d_model=4096, n_heads=32,
+                         n_kv_heads=8, d_ff=14336, vocab_size=32000),
+    "llama3.2-3b": dict(family="dense", n_layers=28, d_model=3072, n_heads=24,
+                        n_kv_heads=8, d_ff=8192, vocab_size=128256),
+    "qwen2-moe-a2.7b": dict(family="moe", n_layers=24, d_model=2048,
+                            n_heads=16, n_kv_heads=16, d_ff=1408,
+                            vocab_size=151936),
+    "qwen1.5-32b": dict(family="dense", n_layers=64, d_model=5120, n_heads=40,
+                        n_kv_heads=40, d_ff=27392, vocab_size=152064),
+    "qwen2-1.5b": dict(family="dense", n_layers=28, d_model=1536, n_heads=12,
+                       n_kv_heads=2, d_ff=8960, vocab_size=151936),
+    "whisper-large-v3": dict(family="audio", n_layers=32, d_model=1280,
+                             n_heads=20, n_kv_heads=20, d_ff=5120,
+                             vocab_size=51866),
+    "zamba2-7b": dict(family="hybrid", n_layers=81, d_model=3584, n_heads=32,
+                      n_kv_heads=32, d_ff=14336, vocab_size=32000),
+}
+
+
+def test_all_archs_registered():
+    assert set(list_archs()) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_exact_assigned_config(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    assert cfg.source
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers <= 4 and r.d_model <= 512
+    if r.moe.enabled:
+        assert r.moe.num_experts <= 4
+
+
+def test_moe_specifics():
+    mx = get_config("mixtral-8x7b")
+    assert mx.moe.num_experts == 8 and mx.moe.top_k == 2
+    assert mx.attention_type == "swa"
+    qm = get_config("qwen2-moe-a2.7b")
+    assert qm.moe.num_experts == 60 and qm.moe.top_k == 4
+    assert qm.moe.num_shared_experts == 4
+
+
+def test_ssm_specifics():
+    m2 = get_config("mamba2-130m")
+    assert m2.ssm.d_state == 128 and m2.attn_free
+    z = get_config("zamba2-7b")
+    assert z.ssm.d_state == 64 and z.hybrid.attn_every == 6
+
+
+def test_param_counts_close_to_public():
+    # within 25% of the public parameter counts
+    approx = {
+        "yi-6b": 6.1e9, "mixtral-8x7b": 46.7e9, "mamba2-130m": 0.13e9,
+        "llama3.2-3b": 3.2e9, "qwen2-1.5b": 1.5e9, "qwen2-vl-7b": 7.6e9,
+        "zamba2-7b": 7.0e9,
+    }
+    for arch, want in approx.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < 0.25, (arch, got, want)

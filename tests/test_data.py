@@ -1,0 +1,127 @@
+"""Data pipeline: tokenizer, workload, arrivals, dataset construction."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data import (
+    GammaArrivals,
+    HashTokenizer,
+    WorkloadGenerator,
+    build_step_samples,
+    exponential_loglik,
+    fit_gamma,
+    gamma_loglik,
+    iqr_filter,
+    make_predictor_dataset,
+    pad_batch,
+    split_622,
+)
+from repro.data.dataset import WINDOW
+from repro.data.tokenizer import CLS_ID, N_SPECIAL, SEP_ID
+from repro.data.workload import TOPICS, similarity_probe_sets
+
+
+def test_tokenizer_deterministic_and_in_range():
+    tok = HashTokenizer(vocab_size=1000)
+    a = tok.encode("the quick brown fox")
+    b = tok.encode("the quick brown fox")
+    assert a == b
+    assert all(N_SPECIAL <= t < 1000 for t in a)
+    assert tok.encode("THE")[0] == tok.encode("the")[0]
+
+
+@given(st.text(alphabet=st.characters(min_codepoint=33, max_codepoint=126),
+               min_size=1, max_size=30))
+@settings(max_examples=100, deadline=None)
+def test_tokenizer_any_word(word):
+    tok = HashTokenizer()
+    tid = tok.token_id(word)
+    assert N_SPECIAL <= tid < tok.vocab_size
+
+
+def test_workload_length_signal_exists():
+    """Latents must determine expected length (what the predictor learns)."""
+    gen = WorkloadGenerator(seed=0)
+    reqs = gen.sample_requests(3000)
+    by_task = {}
+    for r in reqs:
+        by_task.setdefault(r.task, []).append(r.true_output_len)
+    means = {t: np.mean(v) for t, v in by_task.items()}
+    assert means["story"] > means["explain"] > means["factual"] > means["yesno"]
+    # verbosity modifier is visible too
+    by_verb = {}
+    for r in reqs:
+        by_verb.setdefault(r.verbosity, []).append(r.true_output_len)
+    assert np.mean(by_verb["verbose"]) > np.mean(by_verb["terse"])
+
+
+def test_workload_reproducible():
+    a = WorkloadGenerator(seed=42).sample_requests(20)
+    b = WorkloadGenerator(seed=42).sample_requests(20)
+    assert [r.prompt for r in a] == [r.prompt for r in b]
+    assert [r.true_output_len for r in a] == [r.true_output_len for r in b]
+
+
+def test_gamma_fit_recovers_params():
+    rng = np.random.RandomState(0)
+    iv = GammaArrivals().sample_intervals(30_000, rng)
+    a, s = fit_gamma(iv)
+    assert abs(a - 0.73) < 0.05
+    assert abs(s - 10.41) < 0.8
+
+
+def test_gamma_beats_poisson_on_bursty_trace():
+    """Paper Fig. 4: Gamma fits the FabriX-like trace better than Poisson."""
+    rng = np.random.RandomState(1)
+    iv = GammaArrivals().sample_intervals(10_000, rng)
+    a, s = fit_gamma(iv)
+    assert gamma_loglik(iv, a, s) > exponential_loglik(iv)
+
+
+def test_rate_scaled_mean():
+    g = GammaArrivals().rate_scaled(2.0)  # 2 req/s
+    rng = np.random.RandomState(2)
+    iv = g.sample_intervals(20_000, rng)
+    assert abs(iv.mean() - 0.5) < 0.02
+    assert g.alpha == pytest.approx(0.73)  # burstiness preserved
+
+
+def test_step_samples_window_structure():
+    gen = WorkloadGenerator(seed=3)
+    reqs = [r for r in gen.sample_requests(50) if r.true_output_len > 120][:5]
+    samples = build_step_samples(reqs, max_steps=4)
+    for s in samples:
+        assert s.remaining >= 1
+        assert s.tokens[0] == CLS_ID
+        assert SEP_ID in s.tokens
+    by_req = {}
+    for s in samples:
+        by_req.setdefault(s.request_id, []).append(s)
+    for rid, group in by_req.items():
+        group.sort(key=lambda s: s.step)
+        rem = [s.remaining for s in group]
+        assert all(rem[i] - rem[i + 1] == WINDOW for i in range(len(rem) - 1))
+
+
+def test_iqr_filter_and_split():
+    tr, va, te = make_predictor_dataset(300, seed=0)
+    n = len(tr) + len(va) + len(te)
+    assert abs(len(tr) / n - 0.6) < 0.02
+    assert abs(len(va) / n - 0.2) < 0.02
+
+
+def test_pad_batch_shapes():
+    gen = WorkloadGenerator(seed=4)
+    samples = build_step_samples(gen.sample_requests(10))
+    b = pad_batch(samples[:8], max_len=64)
+    assert b["tokens"].shape == (8, 64)
+    assert b["mask"].shape == (8, 64)
+    assert (b["labels"] > 0).all()
+
+
+def test_similarity_probe_sets_disjoint_topics():
+    sim, dis, tok = similarity_probe_sets(50, seed=0)
+    weather = set(TOPICS["weather"]["words"])
+    assert all(set(s.split()) <= weather for s in sim)
+    assert all(not (set(s.split()) & weather) for s in dis)

@@ -1,0 +1,101 @@
+"""Decode-path exactness: prefill + decode_step must reproduce forward()."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import decode_step, forward, init_cache, init_params, prefill
+
+TOL = 5e-5
+
+
+def _batch(cfg, key, B, S):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.random.normal(key, (B, cfg.frontend_tokens,
+                                                  cfg.d_model))
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder.n_frames,
+                                                  cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(list_archs()))
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    batch = _batch(cfg, jax.random.PRNGKey(1), B, S)
+    cache = init_cache(cfg, B, 64)
+    lg, cache = prefill(params, cfg, batch, cache)
+    full, _ = forward(params, cfg, batch)
+    assert float(jnp.max(jnp.abs(lg[:, -1] - full[:, -1]))) < TOL
+
+    toks = batch["tokens"]
+    nxt = jax.random.randint(jax.random.PRNGKey(2), (B, 3), 0, cfg.vocab_size)
+    for i in range(3):
+        lgd, cache = decode_step(params, cfg, nxt[:, i : i + 1], cache)
+        ext = dict(batch)
+        ext["tokens"] = jnp.concatenate([toks, nxt[:, : i + 1]], 1)
+        lge, _ = forward(params, cfg, ext)
+        err = float(jnp.max(jnp.abs(lgd[:, 0] - lge[:, -1])))
+        assert err < TOL, (arch, i, err)
+
+
+def test_heterogeneous_slot_lengths():
+    """Continuous batching: slots at different depths decode identically to
+    isolated per-slot decoding."""
+    cfg = get_config("llama3.2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    t0 = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0, cfg.vocab_size)
+    t1 = jax.random.randint(jax.random.PRNGKey(6), (1, 12), 0, cfg.vocab_size)
+    c0 = init_cache(cfg, 1, 64)
+    c1 = init_cache(cfg, 1, 64)
+    _, c0 = prefill(params, cfg, {"tokens": t0}, c0)
+    _, c1 = prefill(params, cfg, {"tokens": t1}, c1)
+    merged = jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=1)
+        if a.ndim > 1 else jnp.concatenate([a, b]),
+        c0, c1,
+    )
+    nxt = jnp.array([[3], [7]], jnp.int32)
+    lgm, _ = decode_step(params, cfg, nxt, merged)
+    l0, _ = decode_step(params, cfg, nxt[:1], c0)
+    l1, _ = decode_step(params, cfg, nxt[1:], c1)
+    assert float(jnp.max(jnp.abs(lgm[0] - l0[0]))) < TOL
+    assert float(jnp.max(jnp.abs(lgm[1] - l1[0]))) < TOL
+
+
+def test_ring_buffer_equals_full_within_window():
+    """With a ring buffer >= attention window, sliding-window decode must be
+    bit-equal to the full-cache SWA decode."""
+    cfg = get_config("mixtral-8x7b").reduced()  # swa_window=64 (reduced)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 8
+    batch = _batch(cfg, jax.random.PRNGKey(1), B, S)
+    full = init_cache(cfg, B, 256)        # swa -> buffer = window = 64 < 256
+    assert full["kv"].k.shape[2] == cfg.swa_window
+    _, full = prefill(params, cfg, batch, full)
+    big = init_cache(cfg, B, 32)          # buffer 32 >= any reachable len
+    assert not big["kv"].ring
+    _, big = prefill(params, cfg, batch, big)
+    nxt = jax.random.randint(jax.random.PRNGKey(2), (B, 5), 0, cfg.vocab_size)
+    for i in range(5):
+        lr, full = decode_step(params, cfg, nxt[:, i : i + 1], full)
+        lf, big = decode_step(params, cfg, nxt[:, i : i + 1], big)
+        assert float(jnp.max(jnp.abs(lr - lf))) < TOL, i
+
+
+def test_long_context_ring_decode_stays_finite():
+    """Ring decode far past the window: no NaNs, mask arithmetic holds."""
+    cfg = get_config("llama3.2-3b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cache = init_cache(cfg, 1, 10_000, sliding_window=8)
+    assert cache["kv"].ring
+    step = jax.jit(lambda t, c: decode_step(params, cfg, t, c))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 40), 0,
+                              cfg.vocab_size)
+    for i in range(40):
+        lg, cache = step(toks[:, i : i + 1], cache)
+        assert not jnp.any(jnp.isnan(lg))
+    assert int(cache["len"][0]) == 40

@@ -1,0 +1,125 @@
+"""ELIS frontend (Algorithm 1) against a scripted executor."""
+from typing import List, Sequence
+
+import pytest
+
+from repro.core import (
+    ELISFrontend,
+    ExecResult,
+    FrontendConfig,
+    Job,
+    OraclePredictor,
+    PreemptionConfig,
+    SchedulerConfig,
+)
+
+
+class ScriptedExecutor:
+    """Deterministic executor: every window takes 1s, emits token id 7."""
+
+    def __init__(self):
+        self.calls = []
+        self.evictions = []
+
+    def execute(self, node, jobs: Sequence[Job], window, now) -> ExecResult:
+        self.calls.append((now, node, [j.job_id for j in jobs]))
+        toks, fin = [], []
+        for j in jobs:
+            n = min(window, j.true_output_len - j.tokens_generated)
+            toks.append([7] * n)
+            fin.append(j.tokens_generated + n >= j.true_output_len)
+        return ExecResult(1.0, toks, fin)
+
+    def evict(self, node, job):
+        self.evictions.append(job.job_id)
+
+
+def mk_jobs(lens, arrivals=None):
+    arrivals = arrivals or [0.0] * len(lens)
+    return [
+        Job(job_id=i, prompt=f"p{i}", prompt_tokens=[1], arrival_time=a,
+            true_output_len=l)
+        for i, (l, a) in enumerate(zip(lens, arrivals))
+    ]
+
+
+def run(policy, lens, arrivals=None, batch=2, nodes=1, preempt=True):
+    fe = ELISFrontend(
+        FrontendConfig(
+            n_nodes=nodes,
+            scheduler=SchedulerConfig(policy=policy, window=50,
+                                      batch_size=batch),
+            preemption=PreemptionConfig(enabled=preempt, margin=10,
+                                        max_fraction=1.0),
+        ),
+        OraclePredictor() if policy in ("sjf", "isrtf") else None,
+        ScriptedExecutor(),
+    )
+    jobs = mk_jobs(lens, arrivals)
+    for j in jobs:
+        fe.submit(j)
+    done = fe.run()
+    return {j.job_id: j for j in done}, fe
+
+
+def test_all_jobs_finish_exact_lengths():
+    done, _ = run("fcfs", [120, 49, 50, 51])
+    assert len(done) == 4
+    for j in done.values():
+        assert j.tokens_generated == j.true_output_len
+        assert j.finished and j.finish_time is not None
+
+
+def test_isrtf_runs_short_job_first():
+    # batch=1: strict serialization; ISRTF must pick the short job
+    done, fe = run("isrtf", [500, 40], batch=1)
+    assert done[1].finish_time < done[0].finish_time
+
+
+def test_fcfs_head_of_line_blocking():
+    # FCFS with batch=1: the long job 0 blocks the short job 1
+    done, _ = run("fcfs", [500, 40], batch=1, preempt=False)
+    assert done[1].finish_time > done[0].finish_time - 1e-9
+
+
+def test_isrtf_beats_fcfs_mean_jct_here():
+    lens = [400, 30, 30, 30, 30, 30]
+    d_f, _ = run("fcfs", lens, batch=1, preempt=False)
+    d_i, _ = run("isrtf", lens, batch=1)
+    mean = lambda d: sum(j.jct() for j in d.values()) / len(d)
+    assert mean(d_i) < mean(d_f)
+
+
+def test_window_iterations_counted():
+    done, _ = run("fcfs", [120])
+    assert done[0].n_iterations == 3  # 50 + 50 + 20
+
+
+def test_preemption_happens_and_is_counted():
+    # long job running alone; a very short job arrives -> displaces it
+    done, fe = run("isrtf", [1000, 10], arrivals=[0.0, 1.5], batch=1)
+    assert done[0].n_preemptions >= 1
+    assert 0 in fe.executor.evictions
+    assert done[1].finish_time < done[0].finish_time
+
+
+def test_no_preemption_when_disabled():
+    done, fe = run("fcfs", [1000, 10], arrivals=[0.0, 1.5], batch=1,
+                   preempt=False)
+    assert done[0].n_preemptions == 0
+    assert fe.executor.evictions == [] or set(fe.executor.evictions) <= {0, 1}
+
+
+def test_load_balancer_spreads_jobs():
+    done, fe = run("fcfs", [100] * 6, nodes=3)
+    nodes = {j.node for j in done.values()}
+    assert nodes == {0, 1, 2}
+
+
+def test_queuing_delay_accounting():
+    done, _ = run("fcfs", [100, 100, 100], batch=1, preempt=False)
+    # with a 1s/window scripted executor, later jobs accrue queuing delay
+    delays = [done[i].queuing_delay for i in range(3)]
+    assert delays[0] < delays[1] < delays[2]
+    for j in done.values():
+        assert j.queuing_delay <= j.jct() + 1e-9

@@ -1,0 +1,168 @@
+"""Dry-run/roofline infrastructure: HLO collective parser, cost
+extrapolation, int8-KV quantization + kernel, launchers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import collective_bytes
+from repro.launch.costprobe import _axpy, _extrapolate
+from repro.configs import get_config
+from repro.models.layers import dequantize_kv, quantize_kv
+
+
+# --------------------------------------------------------------------------- #
+# HLO collective parser
+# --------------------------------------------------------------------------- #
+
+HLO_SAMPLE = """
+HloModule jit_step
+ENTRY %main {
+  %p0 = bf16[16,1024]{1,0} parameter(0)
+  %ar = bf16[16,1024]{1,0} all-reduce(%p0), replica_groups={{0,1}}
+  %ag = f32[4,256]{1,0} all-gather(%p0), dimensions={0}
+  %rs = bf16[8,512]{1,0} reduce-scatter(%ar), dimensions={0}
+  %tup = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-to-all(%ag, %ag)
+  %cp = s8[100]{0} collective-permute(%p0)
+  // %comment = bf16[9999,9999]{1,0} all-reduce(%p0)  <- must be ignored
+  %mm = bf16[16,1024]{1,0} dot(%p0, %p0)
+}
+"""
+
+
+def test_collective_parser_counts_each_op():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 16 * 1024 * 2
+    assert out["all-gather"] == 4 * 256 * 4
+    assert out["reduce-scatter"] == 8 * 512 * 2
+    assert out["all-to-all"] == 2 * (2 * 2 * 4)  # tuple: both outputs
+    assert out["collective-permute"] == 100 * 1
+    assert out["count"] == 5
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute")
+    )
+
+
+def test_collective_parser_ignores_non_collectives():
+    out = collective_bytes("%x = bf16[4,4]{1,0} dot(%a, %b)")
+    assert out["total"] == 0 and out["count"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# Cost extrapolation (scan correction)
+# --------------------------------------------------------------------------- #
+
+
+def _cost(f, b, c):
+    return {"flops": f, "bytes_accessed": b, "collective_bytes": c}
+
+
+def test_axpy():
+    out = _axpy(_cost(10, 20, 30), _cost(1, 2, 3), 1.0, 2.0)
+    assert out == _cost(12, 24, 36)
+
+
+def test_extrapolate_linear_dense():
+    cfg = get_config("yi-6b")  # 32 layers
+    # cost(L) = 5 + 3L  ->  c2 = 11, c4 = 17, want cost(32) = 101
+    got = _extrapolate(cfg, [_cost(11, 11, 11), _cost(17, 17, 17)])
+    assert got["flops"] == pytest.approx(5 + 3 * 32)
+
+
+def test_extrapolate_hybrid_group_tail():
+    cfg = get_config("zamba2-7b")  # 81L = 13 groups*6 + 3 tail, attn_every=6
+    # model: cost = a + G*g + T*t with a=7, g=11, t=2
+    a, g, t = 7.0, 11.0, 2.0
+    c12 = _cost(*[a + 2 * g] * 3)             # G=2, T=0
+    c15 = _cost(*[a + 2 * g + 3 * t] * 3)     # G=2, T=3
+    c24 = _cost(*[a + 4 * g] * 3)             # G=4, T=0
+    got = _extrapolate(cfg, [c12, c15, c24])
+    assert got["flops"] == pytest.approx(a + 13 * g + 3 * t)
+
+
+def test_extrapolate_audio_joint():
+    cfg = get_config("whisper-large-v3")  # enc=dec=32
+    # cost(k) = 4 + 6k
+    got = _extrapolate(cfg, [_cost(16, 16, 16), _cost(28, 28, 28)])
+    assert got["flops"] == pytest.approx(4 + 6 * 32)
+
+
+# --------------------------------------------------------------------------- #
+# int8 KV quantization + kernel
+# --------------------------------------------------------------------------- #
+
+
+def test_quantize_roundtrip_accuracy():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 32)) * 3.0
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (2, 16)
+    back = dequantize_kv(q, s, jnp.float32)
+    rel = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.02  # 1/127 quantization grid
+
+
+def test_flash_decode_int8_matches_dequantized_reference():
+    from repro.kernels import ops, ref
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, H, KH, L, D = 2, 4, 2, 256, 32
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    kf = jax.random.normal(ks[1], (B, L, KH, D))
+    vf = jax.random.normal(ks[2], (B, L, KH, D))
+    kq, ksc = quantize_kv(kf)
+    vq, vsc = quantize_kv(vf)
+    kv_len = jnp.array([100, 256])
+    out = ops.flash_decode_int8(q, kq, vq, ksc, vsc, kv_len=kv_len,
+                                q_offset=kv_len - 1)
+    want = ref.reference_decode_attention(
+        q, dequantize_kv(kq, ksc, jnp.float32),
+        dequantize_kv(vq, vsc, jnp.float32),
+        kv_len=kv_len, q_offset=kv_len - 1,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+    # and close to the unquantized attention (quantization error only)
+    exact = ref.reference_decode_attention(q, kf, vf, kv_len=kv_len,
+                                           q_offset=kv_len - 1)
+    assert float(jnp.max(jnp.abs(out - exact))) < 0.05
+
+
+# --------------------------------------------------------------------------- #
+# Workload phase structure (the Fig-2b mechanism)
+# --------------------------------------------------------------------------- #
+
+
+def test_response_phases_reveal_progress():
+    from repro.data import WorkloadGenerator
+    from repro.data.workload import CLOSING_WORDS, OPENING_WORDS
+
+    gen = WorkloadGenerator(seed=0)
+    tok = gen.tok
+    open_ids = {tok.token_id(w) for w in OPENING_WORDS}
+    close_ids = {tok.token_id(w) for w in CLOSING_WORDS}
+    reqs = [r for r in gen.sample_requests(200) if r.true_output_len > 120]
+    assert reqs
+    for r in reqs[:20]:
+        head = set(r.output_tokens[:10])
+        tail = set(r.output_tokens[-15:-1])
+        assert head <= open_ids
+        assert tail <= close_ids
+
+
+def test_generate_cli_roundtrip(tmp_path):
+    import json
+    import subprocess
+    import sys
+
+    out = tmp_path / "trace.jsonl"
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.generate", "--n", "5",
+         "--rate", "2.0", "--out", str(out)],
+        check=True, env={**__import__("os").environ, "PYTHONPATH": "src"},
+        cwd="/root/repo",
+    )
+    recs = [json.loads(l) for l in open(out)]
+    assert len(recs) == 5
+    times = [r["arrival_time"] for r in recs]
+    assert times == sorted(times)
+    assert all(r["max_tokens"] >= 1 for r in recs)

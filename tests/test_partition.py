@@ -1,0 +1,113 @@
+"""Partition rules: full leaf coverage + divisibility sanitation."""
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.launch import partition as PT
+from repro.launch.shapes import SHAPES, input_specs, supported
+from repro.models import transformer as T
+
+
+def fake_mesh(shape=(16, 16), names=("data", "model")):
+    return SimpleNamespace(axis_names=names, devices=np.zeros(shape))
+
+
+@pytest.mark.parametrize("arch", sorted(list_archs()))
+def test_param_specs_cover_every_leaf(arch):
+    cfg = get_config(arch)
+    ap = T.abstract_params(cfg)
+    specs = PT.param_pspecs(cfg, ap)  # raises KeyError on uncovered leaves
+    n_leaves = len(jax.tree_util.tree_leaves(ap))
+    n_specs = len(jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_specs == n_leaves
+    # ndim congruence
+    for s, l in zip(
+        jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree_util.tree_leaves(ap),
+    ):
+        assert len(s) <= l.ndim
+
+
+@pytest.mark.parametrize("arch", sorted(list_archs()))
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_cache_and_batch_specs_cover(arch, shape):
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    if not supported(cfg, sh):
+        pytest.skip("documented skip")
+    specs = input_specs(cfg, sh)
+    if "cache" in specs:
+        PT.cache_pspecs(cfg, specs["cache"], ("data",))
+        PT.cache_pspecs(cfg, specs["cache"], ("data",), context_parallel=True)
+    PT.batch_pspecs({k: v for k, v in specs.items() if k != "cache"},
+                    ("data",))
+
+
+def test_sanitize_drops_indivisible():
+    mesh = fake_mesh()
+    spec = P(None, "model")
+    leaf = jax.ShapeDtypeStruct((4, 34), np.float32)  # 34 % 16 != 0
+    out = PT.sanitize_specs(mesh, spec, leaf)
+    assert out == P(None, None)
+    leaf2 = jax.ShapeDtypeStruct((4, 32), np.float32)
+    assert PT.sanitize_specs(mesh, spec, leaf2) == P(None, "model")
+
+
+def test_sanitize_handles_axis_tuples():
+    mesh = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    spec = P(("pod", "data"), None)
+    ok = jax.ShapeDtypeStruct((64, 8), np.float32)    # 64 % 32 == 0
+    bad = jax.ShapeDtypeStruct((40, 8), np.float32)   # 40 % 32 != 0
+    assert PT.sanitize_specs(mesh, spec, ok) == P(("pod", "data"), None)
+    assert PT.sanitize_specs(mesh, spec, bad) == P(None, None)
+
+
+def test_opt_pspecs_add_data_axis():
+    mesh = fake_mesh()
+    pspec = P(None, "model")
+    leaf = jax.ShapeDtypeStruct((64, 32), np.float32)
+    out = PT.opt_pspecs(mesh, pspec, leaf)
+    assert out == P("data", "model")
+    # already fully sharded dim is skipped; indivisible dims skipped
+    leaf2 = jax.ShapeDtypeStruct((7, 32), np.float32)
+    assert PT.opt_pspecs(mesh, pspec, leaf2) == P(None, "model")
+
+
+@pytest.mark.parametrize("shape_name", sorted(SHAPES))
+def test_input_shapes_exact(shape_name):
+    sh = SHAPES[shape_name]
+    expect = {
+        "train_4k": (4096, 256, "train"),
+        "prefill_32k": (32768, 32, "prefill"),
+        "decode_32k": (32768, 128, "decode"),
+        "long_500k": (524288, 1, "decode"),
+    }[shape_name]
+    assert (sh.seq_len, sh.global_batch, sh.kind) == expect
+
+
+def test_decode_shapes_are_one_token():
+    for arch in ("yi-6b", "mamba2-130m", "zamba2-7b"):
+        cfg = get_config(arch)
+        specs = input_specs(cfg, SHAPES["decode_32k"])
+        assert specs["tokens"].shape == (128, 1)
+
+
+def test_long500k_window_carve_in():
+    cfg = get_config("yi-6b")  # full attention -> sliding-window carve-in
+    specs = input_specs(cfg, SHAPES["long_500k"])
+    kv = specs["cache"]["kv"]
+    assert kv.k.shape[2] <= 8192
+    m = get_config("mamba2-130m")  # SSM: O(1) state, no KV at all
+    specs = input_specs(m, SHAPES["long_500k"])
+    assert "kv" not in specs["cache"]
+
+
+def test_whisper_long500k_skip():
+    cfg = get_config("whisper-large-v3")
+    assert not supported(cfg, SHAPES["long_500k"])
+    assert supported(cfg, SHAPES["decode_32k"])

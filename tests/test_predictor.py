@@ -1,0 +1,108 @@
+"""Response-length predictor (paper §3.2/3.3/4.2, Table 2, Fig. 2b).
+
+The heavier "does training reach good R²" checks live in
+benchmarks/table2_predictor.py; here we verify the mechanisms cheaply.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BGEPredictor, Job, PredictorConfig
+from repro.core.predictor import OraclePredictor
+from repro.data import make_predictor_dataset
+from repro.models.encoder import EncoderArchConfig, encode, init_encoder
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return PredictorConfig(
+        encoder=EncoderArchConfig(d_model=64, n_heads=2, n_layers=2, d_ff=128,
+                                  max_len=128),
+        n_fc_layers=8,       # paper: eight FC layers
+        fc_hidden=128,
+        max_len=128,
+        lr=3e-4,             # scratch encoder (not pretrained) — see DESIGN §7
+    )
+
+
+def test_head_has_eight_layers(tiny_cfg):
+    p = BGEPredictor(tiny_cfg)
+    assert len(p.params["head"]["layers"]) == 8
+
+
+def test_untrained_predictions_positive(tiny_cfg):
+    p = BGEPredictor(tiny_cfg)
+    out = p.predict_tokens([[1, 2, 3], [4, 5, 6, 7]])
+    assert out.shape == (2,)
+    assert (out >= 1).all()
+
+
+def test_training_improves_mae(tiny_cfg):
+    tr, va, te = make_predictor_dataset(400, seed=0, max_len=128, max_steps=4)
+    p = BGEPredictor(tiny_cfg, seed=0)
+    before = p.evaluate(te[:200])
+    p.fit(tr, num_steps=250, batch_size=32)
+    after = p.evaluate(te[:200])
+    assert after["mae"] < before["mae"]
+    assert after["r2"] > before["r2"]
+
+
+def test_frozen_encoder_mode(tiny_cfg):
+    import dataclasses
+
+    cfg = dataclasses.replace(tiny_cfg, freeze_encoder=True)
+    p = BGEPredictor(cfg, seed=0)
+    enc_before = jax.tree_util.tree_leaves(p.params["encoder"])[0].copy()
+    tr, _, _ = make_predictor_dataset(100, seed=1, max_len=128, max_steps=2)
+    p.fit(tr[:64], num_steps=10, batch_size=16)
+    enc_after = jax.tree_util.tree_leaves(p.params["encoder"])[0]
+    np.testing.assert_array_equal(np.asarray(enc_before),
+                                  np.asarray(enc_after))
+
+
+def test_iterative_input_includes_partial_output(tiny_cfg):
+    p = BGEPredictor(tiny_cfg)
+    j = Job(job_id=0, prompt="x", prompt_tokens=[10, 11], arrival_time=0.0)
+    base = p._job_input(j)
+    j.generated = [20, 21, 22]
+    longer = p._job_input(j)
+    assert len(longer) == len(base) + 3
+    assert longer[: len(base)] == base
+
+
+def test_oracle_is_exact():
+    o = OraclePredictor()
+    j = Job(job_id=0, prompt="x", prompt_tokens=[1], arrival_time=0.0,
+            true_output_len=77)
+    assert o.init(j) == 77
+    j.generated = [5] * 30
+    assert o.iter(j) == 47
+
+
+def test_encoder_separates_topics():
+    """Fig. 1: same-topic sentences cluster tighter than cross-topic ones —
+    even an untrained encoder shows the gap because topic vocabularies map to
+    distinct token ids (structure the trained predictor exploits)."""
+    from repro.data import similarity_probe_sets
+
+    sim, dis, tok = similarity_probe_sets(40, seed=0)
+    cfg = EncoderArchConfig(d_model=64, n_heads=2, n_layers=2, d_ff=128,
+                            max_len=32)
+    params = init_encoder(jax.random.PRNGKey(0), cfg)
+
+    def embed(sentences):
+        ml = 16
+        toks = np.zeros((len(sentences), ml), np.int32)
+        mask = np.zeros((len(sentences), ml), bool)
+        for i, s in enumerate(sentences):
+            ids = tok.encode(s, add_cls=True)[:ml]
+            toks[i, : len(ids)] = ids
+            mask[i, : len(ids)] = True
+        cls, mean = encode(params, cfg, jnp.asarray(toks), jnp.asarray(mask))
+        return np.asarray(mean)
+
+    es, ed = embed(sim), embed(dis)
+    intra = np.linalg.norm(es - es.mean(0), axis=1).mean()
+    inter = np.linalg.norm(ed - ed.mean(0), axis=1).mean()
+    assert intra < inter

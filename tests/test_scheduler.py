@@ -1,0 +1,130 @@
+"""Scheduler policy unit + property tests (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Job,
+    NoisyOraclePredictor,
+    OraclePredictor,
+    PreemptionConfig,
+    SchedulerConfig,
+    make_policy,
+    select_preemptions,
+)
+from repro.core.frontend import batch_effective
+
+
+def mk_job(i, arrival=0.0, true_len=100, generated=0):
+    j = Job(job_id=i, prompt=f"p{i}", prompt_tokens=[1, 2, 3],
+            arrival_time=arrival, true_output_len=true_len)
+    j.generated = [7] * generated
+    return j
+
+
+def test_fcfs_orders_by_arrival():
+    pol = make_policy(SchedulerConfig(policy="fcfs"), None)
+    jobs = [mk_job(0, arrival=5.0), mk_job(1, arrival=1.0)]
+    pris = batch_effective(pol, jobs, now=10.0)
+    assert pris[1] < pris[0]
+
+
+def test_isrtf_prefers_short_remaining():
+    pol = make_policy(SchedulerConfig(policy="isrtf"), OraclePredictor())
+    jobs = [mk_job(0, true_len=500), mk_job(1, true_len=20)]
+    pris = batch_effective(pol, jobs, now=0.0)
+    assert pris[1] < pris[0]
+
+
+def test_isrtf_priority_updates_with_progress():
+    pol = make_policy(SchedulerConfig(policy="isrtf"), OraclePredictor())
+    j = mk_job(0, true_len=500)
+    p0 = batch_effective(pol, [j], now=0.0)[0]
+    j.generated = [7] * 450
+    p1 = batch_effective(pol, [j], now=1.0)[0]
+    assert p1 < p0
+
+
+def test_sjf_keeps_first_estimate():
+    pol = make_policy(SchedulerConfig(policy="sjf"), OraclePredictor())
+    j = mk_job(0, true_len=300)
+    p0 = batch_effective(pol, [j], now=0.0)[0]
+    j.true_output_len = 999  # oracle would now say 999 - but SJF is one-shot
+    j.generated = [7] * 50
+    p1 = batch_effective(pol, [j], now=1.0)[0]
+    assert p1 == pytest.approx(p0 - 50)
+
+
+def test_aging_prevents_starvation():
+    cfg = SchedulerConfig(policy="isrtf", aging_rate=10.0)
+    pol = make_policy(cfg, OraclePredictor())
+    old = mk_job(0, true_len=1000)
+    old.record_enqueue(0.0)
+    young = mk_job(1, true_len=10)
+    young.record_enqueue(99.9)
+    pris = batch_effective(pol, [old, young], now=100.0)
+    assert pris[0] < pris[1]  # 1000 - 10*100 < 10
+
+
+def test_mlfq_demotes_by_service():
+    pol = make_policy(SchedulerConfig(policy="mlfq"), None)
+    fresh = mk_job(0, arrival=50.0, generated=0)
+    served = mk_job(1, arrival=0.0, generated=300)
+    pris = batch_effective(pol, [fresh, served], now=60.0)
+    assert pris[0] < pris[1]
+
+
+def test_requires_predictor():
+    with pytest.raises(ValueError):
+        make_policy(SchedulerConfig(policy="isrtf"), None)
+    with pytest.raises(ValueError):
+        make_policy(SchedulerConfig(policy="nope"), OraclePredictor())
+
+
+# --------------------------------------------------------------------------- #
+# Preemption policy properties
+# --------------------------------------------------------------------------- #
+
+
+@given(
+    run=st.lists(st.floats(1, 1e4), min_size=1, max_size=8),
+    wait=st.lists(st.floats(1, 1e4), min_size=1, max_size=8),
+    margin=st.floats(0, 100),
+    frac=st.floats(0, 1),
+)
+@settings(max_examples=200, deadline=None)
+def test_preemption_properties(run, wait, margin, frac):
+    running = [(p, mk_job(100 + i)) for i, p in enumerate(run)]
+    waiting = [(p, mk_job(200 + i)) for i, p in enumerate(wait)]
+    cfg = PreemptionConfig(enabled=True, margin=margin, max_fraction=frac)
+    swaps = select_preemptions(running, waiting, cfg)
+    # budget respected
+    assert len(swaps) <= int(len(running) * frac)
+    # each swap strictly beats the victim by the margin
+    run_pri = {j.job_id: p for p, j in running}
+    wait_pri = {j.job_id: p for p, j in waiting}
+    for victim, repl in swaps:
+        assert wait_pri[repl.job_id] + margin < run_pri[victim.job_id]
+    # no duplicates
+    assert len({v.job_id for v, _ in swaps}) == len(swaps)
+    assert len({r.job_id for _, r in swaps}) == len(swaps)
+
+
+def test_preemption_disabled():
+    running = [(100.0, mk_job(0))]
+    waiting = [(1.0, mk_job(1))]
+    assert select_preemptions(running, waiting,
+                              PreemptionConfig(enabled=False)) == []
+
+
+@given(st.lists(st.integers(1, 1000), min_size=2, max_size=30))
+@settings(max_examples=100, deadline=None)
+def test_noisy_oracle_positive_and_decaying_sigma(lens):
+    pred = NoisyOraclePredictor(seed=1)
+    for i, l in enumerate(lens):
+        j = mk_job(i, true_len=l)
+        p = pred.init(j)
+        assert p >= 1.0
+    assert pred._sigma(5) < pred._sigma(0)
+    assert pred._sigma(100) == pred.sigma_floor

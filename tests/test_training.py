@@ -1,0 +1,93 @@
+"""Training substrate: AdamW, schedules, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+    schedule_lr,
+    train,
+)
+
+
+def test_adamw_converges_quadratic():
+    params = {"x": jnp.array(5.0)}
+    cfg = AdamWConfig(lr=0.1, schedule="constant", weight_decay=0.0,
+                      warmup_steps=0)
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = adamw_update(cfg, grads, state, params)
+    assert abs(float(params["x"])) < 1e-2
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones(4) * 3.0, "b": jnp.ones(9) * 4.0}
+    norm = float(global_norm(tree))
+    clipped, reported = clip_by_global_norm(tree, max_norm=1.0)
+    assert float(reported) == pytest.approx(norm)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                      schedule="cosine", min_lr_ratio=0.1)
+    lr0 = float(schedule_lr(cfg, jnp.asarray(0)))
+    lr5 = float(schedule_lr(cfg, jnp.asarray(5)))
+    lr10 = float(schedule_lr(cfg, jnp.asarray(10)))
+    lr_end = float(schedule_lr(cfg, jnp.asarray(110)))
+    assert lr0 == 0.0 and 0 < lr5 < lr10 == pytest.approx(1.0)
+    assert lr_end == pytest.approx(0.1, abs=1e-6)
+
+
+def test_trainable_mask_freezes():
+    params = {"train": jnp.array(1.0), "frozen": jnp.array(1.0)}
+    mask = {"train": True, "frozen": False}
+    cfg = AdamWConfig(lr=0.5, schedule="constant", warmup_steps=0)
+    state = adamw_init(params)
+    grads = {"train": jnp.array(1.0), "frozen": jnp.array(1.0)}
+    params, state, _ = adamw_update(cfg, grads, state, params,
+                                    trainable_mask=mask)
+    assert float(params["frozen"]) == 1.0
+    assert float(params["train"]) != 1.0
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones(4)}}
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    save_checkpoint(d, 7, tree, metadata={"note": "hi"})
+    assert latest_step(d) == 7
+    restored, meta = restore_checkpoint(d, 7, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert meta["note"] == "hi"
+
+
+def test_checkpoint_gc(tmp_path):
+    tree = {"w": jnp.zeros(2)}
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    for s in range(6):
+        save_checkpoint(d, s, tree, keep=3)
+    kept = sorted(os.listdir(d))
+    assert len(kept) == 3 and kept[-1] == "step_00000005"
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    save_checkpoint(d, 1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, 1, {"w": jnp.zeros((3, 3))})
