@@ -1,6 +1,7 @@
 """Live-engine evaluation: ISRTF vs FCFS on the real JAX engine (reduced
 model, wall-clock timed) — validates that the mechanism's gains survive on
-a real continuous-batching execution engine, not only in simulation."""
+a real continuous-batching execution engine, not only in simulation.
+Drives the engine through the online :class:`ElisServer` API."""
 from __future__ import annotations
 
 import jax
@@ -8,11 +9,12 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import (
-    ELISFrontend,
+    ElisServer,
     FrontendConfig,
-    Job,
     OraclePredictor,
     PreemptionConfig,
+    Request,
+    RequestOptions,
     SchedulerConfig,
     summarize,
 )
@@ -22,18 +24,19 @@ from repro.models import init_params
 from benchmarks.common import save_results
 
 
-def _jobs(n, seed):
+def _requests(n, seed, max_tokens=48):
     rng = np.random.RandomState(seed)
-    jobs = []
+    reqs = []
     t = 0.0
     for i in range(n):
         # bimodal lengths: mostly short, some long (LMSYS-like skew)
         length = int(rng.choice([8, 12, 48], p=[0.5, 0.3, 0.2]))
         t += float(rng.gamma(0.73, 0.4))
-        jobs.append(Job(job_id=i, prompt=f"p{i}",
-                        prompt_tokens=[10 + i % 50, 20, 30],
-                        arrival_time=t, true_output_len=length))
-    return jobs
+        reqs.append(Request(
+            prompt=f"p{i}", prompt_tokens=[10 + i % 50, 20, 30],
+            arrival_time=t, true_output_len=length,
+            options=RequestOptions(max_tokens=max_tokens)))
+    return reqs
 
 
 def run(quick: bool = False):
@@ -45,7 +48,7 @@ def run(quick: bool = False):
         engine = InferenceEngine(cfg, params, EngineConfig(
             max_slots=2, max_len=256, max_output=48, eos_id=-1,
             respect_job_max=True))
-        fe = ELISFrontend(
+        server = ElisServer(
             FrontendConfig(
                 n_nodes=1,
                 scheduler=SchedulerConfig(policy=policy, window=8,
@@ -55,13 +58,9 @@ def run(quick: bool = False):
             OraclePredictor() if policy != "fcfs" else None,
             EngineExecutor({0: engine}),
         )
-        jobs = _jobs(n, seed=3)
-        # oracle length = the engine's max_output cap or the job's nominal
-        for j in jobs:
-            j.true_output_len = min(j.true_output_len, 48)
-        for j in jobs:
-            fe.submit(j)
-        done = fe.run()
+        for r in _requests(n, seed=3):
+            server.submit(r)
+        done = server.drain()
         m = summarize(done)
         rows.append({"policy": policy, "n_jobs": len(done),
                      "jct_mean_s": round(m["jct_mean"], 3),

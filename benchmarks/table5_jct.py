@@ -2,7 +2,8 @@
 
 5 models (opt6.7, opt13, lam7, lam13, vic) × RPS multiples {1, 3, 5} ×
 {FCFS, ISRTF, SJF-oracle}, batch size 4, 200 prompts, 3 shuffled trials —
-the paper's main experiment, on the calibrated discrete-event cluster.
+the paper's main experiment, on the calibrated discrete-event cluster,
+driven through the online ``ElisServer`` request API (``simulate.runner``).
 Also reproduces the Fig. 5-right queuing-delay decomposition for the best
 case and the ISRTF-vs-FCFS improvement matrix.
 """
@@ -64,6 +65,10 @@ def run(quick: bool = False) -> List[Dict]:
                 "ordering_ok": res["sjf"]["jct_mean"]
                 <= res["isrtf"]["jct_mean"] * 1.1
                 and res["isrtf"]["jct_mean"] <= res["fcfs"]["jct_mean"] * 1.1,
+                # lifecycle sanity from the Response-level accounting: no
+                # request may end CANCELLED/EXPIRED in the closed-loop runs
+                "all_finished": all(res[p]["n_unfinished"] == 0
+                                    for p in ("fcfs", "isrtf", "sjf")),
             }
             if paper:
                 row["paper_fcfs"], row["paper_isrtf"], row["paper_sjf"] = paper

@@ -1,20 +1,22 @@
-"""Quickstart: serve a reduced model through ELIS with ISRTF scheduling.
+"""Quickstart: serve a reduced model through the ELIS online API.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Builds a reduced qwen2-1.5b, submits a handful of prompts with bursty
-(Gamma) arrivals, and prints per-job JCT under the ISRTF scheduler driving
-the live JAX engine.
+(Gamma) arrivals through :class:`ElisServer`, streams one response chunk by
+chunk, and prints per-request JCT under the ISRTF scheduler driving the
+live JAX engine.
 """
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.core import (
-    ELISFrontend,
+    ElisServer,
     FrontendConfig,
-    Job,
     OraclePredictor,
+    Request,
+    RequestOptions,
     SchedulerConfig,
     summarize,
 )
@@ -31,7 +33,7 @@ def main():
         max_slots=2, max_len=256, max_output=24, eos_id=-1,
         respect_job_max=True))
 
-    frontend = ELISFrontend(
+    server = ElisServer(
         FrontendConfig(n_nodes=1,
                        scheduler=SchedulerConfig(policy="isrtf", window=8,
                                                  batch_size=2)),
@@ -49,17 +51,28 @@ def main():
     rng = np.random.RandomState(0)
     arrivals = GammaArrivals().rate_scaled(2.0).sample_arrival_times(
         len(prompts), rng)
-    for i, ((text, length), t) in enumerate(zip(prompts, arrivals)):
-        frontend.submit(Job(job_id=i, prompt=text,
-                            prompt_tokens=tok.encode(text),
-                            arrival_time=float(t), true_output_len=length))
+    handles = []
+    for (text, length), t in zip(prompts, arrivals):
+        handles.append(server.submit(Request(
+            prompt=text, prompt_tokens=tok.encode(text),
+            arrival_time=float(t), true_output_len=length,
+            options=RequestOptions(max_tokens=length, stream=True))))
 
-    done = frontend.run()
-    print(f"\n{'job':>3s} {'len':>4s} {'JCT s':>8s} {'queue s':>8s}  prompt")
-    for j in sorted(done, key=lambda j: j.job_id):
-        print(f"{j.job_id:3d} {j.tokens_generated:4d} {j.jct():8.2f} "
-              f"{j.queuing_delay:8.2f}  {j.prompt[:40]}")
-    m = summarize(done)
+    # stream the first request token-chunk by token-chunk (this steps the
+    # scheduler just far enough to produce each chunk)
+    print("\nstreaming request 0:")
+    for chunk in server.stream(handles[0]):
+        tail = " (final)" if chunk.final else ""
+        print(f"  t={chunk.t:6.2f}s iter {chunk.index}: "
+              f"{len(chunk.tokens)} tokens{tail}")
+
+    # then drain the rest of the system to completion
+    responses = server.drain()
+    print(f"\n{'req':>3s} {'len':>4s} {'JCT s':>8s} {'queue s':>8s}  prompt")
+    for r, (text, _) in zip(responses, prompts):
+        print(f"{r.request_id:3d} {r.n_tokens:4d} {r.jct():8.2f} "
+              f"{r.queuing_delay:8.2f}  {text[:40]}")
+    m = summarize(responses)
     print(f"\nmean JCT {m['jct_mean']:.2f}s; mean queuing delay "
           f"{m['queuing_delay_mean']:.2f}s; throughput {m['throughput_rps']:.2f} req/s")
 

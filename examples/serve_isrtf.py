@@ -3,9 +3,10 @@
     PYTHONPATH=src python examples/serve_isrtf.py [--jobs 12]
 
 Serves a stream of Gamma-arrival requests on the live JAX engine under all
-three schedulers (FCFS, ISRTF, SJF-oracle) and prints the JCT comparison —
-the full ELIS pipeline: workload -> frontend (Algorithm 1) -> priority
-buffer -> continuous-batching engine -> iterative re-prediction.
+three schedulers (FCFS, ISRTF, SJF-oracle) through the online
+:class:`ElisServer` API and prints the JCT comparison — the full ELIS
+pipeline: workload -> frontend (Algorithm 1) -> priority buffer ->
+continuous-batching engine -> iterative re-prediction.
 """
 import argparse
 
@@ -14,11 +15,12 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import (
-    ELISFrontend,
+    ElisServer,
     FrontendConfig,
-    Job,
     OraclePredictor,
     PreemptionConfig,
+    Request,
+    RequestOptions,
     SchedulerConfig,
     summarize,
 )
@@ -27,18 +29,20 @@ from repro.engine import EngineConfig, EngineExecutor, InferenceEngine
 from repro.models import init_params
 
 
-def make_jobs(n, seed=0):
+def make_requests(n, seed=0, max_tokens=40):
     tok = HashTokenizer()
     rng = np.random.RandomState(seed)
     arrivals = GammaArrivals().rate_scaled(1.5).sample_arrival_times(n, rng)
-    jobs = []
+    reqs = []
     for i in range(n):
         length = int(rng.choice([6, 12, 40], p=[0.5, 0.3, 0.2]))
         text = f"request {i} with target verbosity {length}"
-        jobs.append(Job(job_id=i, prompt=text, prompt_tokens=tok.encode(text),
-                        arrival_time=float(arrivals[i]),
-                        true_output_len=length))
-    return jobs
+        reqs.append(Request(
+            prompt=text, prompt_tokens=tok.encode(text),
+            arrival_time=float(arrivals[i]),
+            true_output_len=length,
+            options=RequestOptions(max_tokens=max_tokens)))
+    return reqs
 
 
 def main():
@@ -55,7 +59,7 @@ def main():
         engine = InferenceEngine(cfg, params, EngineConfig(
             max_slots=2, max_len=256, max_output=40, eos_id=-1,
             respect_job_max=True))
-        fe = ELISFrontend(
+        server = ElisServer(
             FrontendConfig(
                 n_nodes=1,
                 scheduler=SchedulerConfig(policy=policy, window=args.window,
@@ -65,10 +69,9 @@ def main():
             OraclePredictor() if policy != "fcfs" else None,
             EngineExecutor({0: engine}),
         )
-        for j in make_jobs(args.jobs):
-            j.true_output_len = min(j.true_output_len, 40)
-            fe.submit(j)
-        m = summarize(fe.run())
+        for r in make_requests(args.jobs):
+            server.submit(r)
+        m = summarize(server.drain())
         results[policy] = m
         print(f"{policy:6s}: mean JCT {m['jct_mean']:7.2f}s  "
               f"queue {m['queuing_delay_mean']:6.2f}s  "

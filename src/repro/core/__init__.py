@@ -1,5 +1,11 @@
-"""ELIS core: the paper's contribution (ISRTF + iterative length predictor)."""
-from repro.core.job import Job, JobState
+"""ELIS core: the paper's contribution (ISRTF + iterative length predictor).
+
+Public serving surface (``repro.core.api``): ``ElisServer`` + the typed
+request lifecycle (``Request``/``RequestOptions``/``TokenChunk``/``Response``/
+``RequestStatus``).  Scheduler internals (``Job``, ``ELISFrontend``) remain
+importable for tests and benchmarks but are not part of the caller contract.
+"""
+from repro.core.job import Job, JobState, TERMINAL_STATES
 from repro.core.load_balancer import GlobalState, LoadBalancer
 from repro.core.metrics import improvement, summarize
 from repro.core.predictor import (
@@ -15,11 +21,29 @@ from repro.core.scheduler import (
     make_policy,
     select_preemptions,
 )
-from repro.core.frontend import ELISFrontend, ExecResult, FrontendConfig
+from repro.core.frontend import (
+    Backend,
+    ELISFrontend,
+    Event,
+    ExecResult,
+    FrontendConfig,
+)
+from repro.core.api import (
+    ElisServer,
+    Request,
+    RequestHandle,
+    RequestOptions,
+    RequestStatus,
+    Response,
+    TokenChunk,
+)
 
 __all__ = [
     "BGEPredictor",
+    "Backend",
     "ELISFrontend",
+    "ElisServer",
+    "Event",
     "ExecResult",
     "FrontendConfig",
     "GlobalState",
@@ -31,7 +55,14 @@ __all__ = [
     "PredictorConfig",
     "PreemptionConfig",
     "PriorityBuffer",
+    "Request",
+    "RequestHandle",
+    "RequestOptions",
+    "RequestStatus",
+    "Response",
     "SchedulerConfig",
+    "TERMINAL_STATES",
+    "TokenChunk",
     "improvement",
     "make_policy",
     "select_preemptions",

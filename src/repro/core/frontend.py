@@ -1,4 +1,4 @@
-"""ELIS frontend scheduler — Algorithm 1 as an event-driven loop.
+"""ELIS frontend scheduler — Algorithm 1 as a *steppable* event loop.
 
 One implementation drives both backends:
   * the **cluster simulator** (``repro.simulate``) — virtual time, calibrated
@@ -15,15 +15,26 @@ Semantics (faithful to the paper):
     margin/frequency knobs);
   * displaced jobs pay a KV-recompute cost when they next run;
   * prompts are sent to the backend once (re-dispatch is metadata-only).
+
+Online extensions (paper §4.1, "continuously admits requests"):
+  * the event heap is **resumable** — ``step``/``run_until`` interleave with
+    late ``submit``/``cancel`` calls instead of the drain-once ``run``;
+  * cancellation and deadline expiry flow through the scheduler: the job is
+    evicted from its backend (releasing the slot) and surfaces as a terminal
+    ``CANCELLED``/``EXPIRED`` state;
+  * every window emits per-job :class:`~repro.core.api.TokenChunk`\\ s, the
+    unit of streaming.
 """
 from __future__ import annotations
 
+import abc
 import heapq
 import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple
 
-from repro.core.job import Job, JobState
+from repro.core.api import TokenChunk
+from repro.core.job import TERMINAL_STATES, Job, JobState
 from repro.core.load_balancer import GlobalState, LoadBalancer
 from repro.core.predictor import Predictor
 from repro.core.scheduler import (
@@ -43,11 +54,51 @@ class ExecResult:
         self.finished = finished
 
 
+class Backend(abc.ABC):
+    """Execution backend behind the frontend (simulator or live engine).
+
+    ``execute`` runs one scheduling window for a batch and reports the new
+    tokens (which the frontend re-emits as per-window ``TokenChunk``\\ s);
+    ``evict`` releases a job's backend residency (finish / preemption /
+    cancellation / expiry all route through it); ``free_capacity`` bounds
+    batch admissions when the backend is tighter than the configured batch
+    size (``capacity`` is the static counterpart, for introspection).
+    """
+
+    @abc.abstractmethod
+    def execute(self, node: int, jobs: Sequence[Job], window: int,
+                now: float) -> ExecResult: ...
+
+    @abc.abstractmethod
+    def evict(self, node: int, job: Job) -> None: ...
+
+    def capacity(self, node: int) -> Optional[int]:
+        """Max concurrent jobs node can hold; None = unbounded."""
+        return None
+
+    def free_capacity(self, node: int) -> Optional[int]:
+        """Currently free job slots on ``node``; None = unbounded."""
+        return None
+
+
 class Executor(Protocol):
+    """Structural variant of :class:`Backend` (duck-typed test doubles)."""
+
     def execute(self, node: int, jobs: Sequence[Job], window: int,
                 now: float) -> ExecResult: ...
 
     def evict(self, node: int, job: Job) -> None: ...
+
+
+@dataclass(frozen=True)
+class Event:
+    """One observable lifecycle transition, emitted by ``step``."""
+
+    t: float
+    #: arrival | tokens | preempted | finished | cancelled | expired
+    kind: str
+    job_id: int
+    chunk: Optional[TokenChunk] = None
 
 
 @dataclass
@@ -55,6 +106,11 @@ class FrontendConfig:
     n_nodes: int = 1
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
     preemption: PreemptionConfig = field(default_factory=PreemptionConfig)
+
+
+#: effective-priority penalty per priority class — large enough that class
+#: bands never interleave for any realistic predicted length (tokens)
+PRIORITY_CLASS_WEIGHT = 1e7
 
 
 def batch_effective(policy: Policy, jobs: Sequence[Job], now: float) -> List[float]:
@@ -75,7 +131,7 @@ def batch_effective(policy: Policy, jobs: Sequence[Job], now: float) -> List[flo
     for j, p in zip(jobs, pris):
         j.priority = p
         j.predictions.append(p)
-        eff = p
+        eff = p + j.priority_class * PRIORITY_CLASS_WEIGHT
         if policy.cfg.aging_rate > 0 and j.last_enqueue_time is not None:
             eff -= policy.cfg.aging_rate * max(now - j.last_enqueue_time, 0.0)
         out.append(eff)
@@ -95,38 +151,176 @@ class ELISFrontend:
         self.running: Dict[int, List[Job]] = {n: [] for n in range(cfg.n_nodes)}
         self.node_busy: Dict[int, bool] = {n: False for n in range(cfg.n_nodes)}
         self.finished: List[Job] = []
-        self._events: List[Tuple[float, int, str, object]] = []
+        #: cancelled + expired jobs (terminal but not FINISHED)
+        self.terminated: List[Job] = []
+        self.jobs: Dict[int, Job] = {}
+        self.now: float = 0.0
+        self._events: List[Tuple[float, int, int, str, object]] = []
         self._seq = itertools.count()
+        #: lifecycle events produced outside step() (e.g. immediate cancels),
+        #: flushed into the next step()/run_until() return value
+        self._side_events: List[Event] = []
+
+    #: tie-break at equal timestamps: arrivals land before deadline checks,
+    #: which land before node scheduling — so a job arriving exactly when a
+    #: node frees is schedulable in that very window, regardless of whether
+    #: it was submitted before or after the simulation started (this keeps
+    #: interleaved step()/submit() traces identical to drain-once runs)
+    _KIND_RANK = {"arrival": 0, "deadline": 1, "node_free": 2}
 
     # ------------------------------------------------------------------ #
     def _push_event(self, t: float, kind: str, data) -> None:
-        heapq.heappush(self._events, (t, next(self._seq), kind, data))
+        heapq.heappush(self._events,
+                       (t, self._KIND_RANK[kind], next(self._seq), kind, data))
 
     def submit(self, job: Job) -> None:
-        self._push_event(job.arrival_time, "arrival", job)
+        """Admit a job.  May be called at any point — before, between, or
+        after ``step``/``run_until`` calls.  Arrivals dated before the
+        current clock are admitted at the current clock."""
+        self.jobs[job.job_id] = job
+        t = max(job.arrival_time, self.now)
+        self._push_event(t, "arrival", job)
+        if job.deadline is not None:
+            self._push_event(max(job.deadline, t), "deadline", job)
+
+    def cancel(self, job_id: int) -> bool:
+        """Cancel a live job.  Waiting (or not-yet-arrived) jobs terminate
+        immediately; running jobs are evicted at the next window boundary.
+        Returns False for unknown or already-terminal jobs."""
+        job = self.jobs.get(job_id)
+        if job is None or job.state in TERMINAL_STATES:
+            return False
+        node = job.node
+        if node >= 0 and job in self.waiting.get(node, ()):
+            self.waiting[node].remove(job)
+            self._terminate(job, node, JobState.CANCELLED, self.now,
+                            self._side_events)
+        else:
+            # running (evicted when its node next schedules) or not yet
+            # arrived (terminated at its arrival event)
+            job.cancel_requested = True
+        return True
+
+    def forget(self, job_id: int) -> bool:
+        """Drop a *terminal* job's record (long-lived servers release
+        completed requests to bound memory).  Returns False if the job is
+        unknown or still live."""
+        job = self.jobs.get(job_id)
+        if job is None or job.state not in TERMINAL_STATES:
+            return False
+        del self.jobs[job_id]
+        if job in self.finished:
+            self.finished.remove(job)
+        elif job in self.terminated:
+            self.terminated.remove(job)
+        return True
 
     # ------------------------------------------------------------------ #
+    def pending(self) -> int:
+        """Unprocessed scheduler events."""
+        return len(self._events)
+
+    def next_event_time(self) -> Optional[float]:
+        return self._events[0][0] if self._events else None
+
+    def step(self, now: Optional[float] = None) -> List[Event]:
+        """Process the single next event.  With ``now`` given, only events
+        due by ``now`` are processed (and the clock advances to at most
+        ``now``).  Returns the lifecycle events the step produced."""
+        out: List[Event] = []
+        if self._side_events:
+            out.extend(self._side_events)
+            self._side_events.clear()
+        if not self._events:
+            return out
+        if now is not None and self._events[0][0] > now:
+            self.now = max(self.now, now)
+            return out
+        t, _, _, kind, data = heapq.heappop(self._events)
+        self.now = max(self.now, t)
+        if kind == "arrival":
+            self._on_arrival(data, t, out)
+        elif kind == "node_free":
+            self._on_node_free(data, t, out)
+        elif kind == "deadline":
+            self._on_deadline(data, t, out)
+        return out
+
+    def run_until(self, t: float) -> List[Event]:
+        """Process every event due by ``t`` and advance the clock to ``t``."""
+        out: List[Event] = []
+        while self._events and self._events[0][0] <= t:
+            out.extend(self.step())
+        out.extend(self._side_events)
+        self._side_events.clear()
+        self.now = max(self.now, t)
+        return out
+
     def run(self) -> List[Job]:
+        """Drain every pending event (legacy closed-loop mode) and return
+        the finished jobs."""
         while self._events:
-            now, _, kind, data = heapq.heappop(self._events)
-            if kind == "arrival":
-                self._on_arrival(data, now)
-            elif kind == "node_free":
-                self._on_node_free(data, now)
+            self.step()
         return self.finished
 
     # ------------------------------------------------------------------ #
-    def _on_arrival(self, job: Job, now: float) -> None:
+    def _terminate(self, job: Job, node: int, state: JobState, t: float,
+                   out: List[Event]) -> None:
+        """Move a non-finished job to a terminal state, releasing its
+        backend residency and its load-balancer count."""
+        assert job.state not in TERMINAL_STATES
+        job.state = state
+        job.finish_time = t
+        job.cancel_requested = False
+        self.executor.evict(node, job)
+        self.state.finish_job(node)
+        self.terminated.append(job)
+        out.append(Event(t, state.value, job.job_id))
+
+    def _on_arrival(self, job: Job, now: float, out: List[Event]) -> None:
+        if job.cancel_requested:
+            # cancelled (or expired) before it ever reached a node
+            expired = job.deadline is not None and now >= job.deadline
+            job.state = (JobState.EXPIRED if expired else JobState.CANCELLED)
+            job.finish_time = now
+            job.cancel_requested = False
+            self.terminated.append(job)
+            out.append(Event(now, job.state.value, job.job_id))
+            return
         node = self.balancer.assign(job)
         job.state = JobState.WAITING
         job.record_enqueue(now)
         self.waiting[node].append(job)
+        out.append(Event(now, "arrival", job.job_id))
         if not self.node_busy[node]:
             self._push_event(now, "node_free", node)
             self.node_busy[node] = True  # claimed; released when truly idle
 
-    def _on_node_free(self, node: int, now: float) -> None:
-        batch = self._form_batch(node, now)
+    def _on_deadline(self, job: Job, now: float, out: List[Event]) -> None:
+        if job.state in TERMINAL_STATES:
+            return
+        node = job.node
+        if node >= 0 and job in self.waiting.get(node, ()):
+            self.waiting[node].remove(job)
+            self._terminate(job, node, JobState.EXPIRED, now, out)
+        elif node >= 0 and job in self.running.get(node, ()):
+            self.running[node].remove(job)
+            self._terminate(job, node, JobState.EXPIRED, now, out)
+        else:
+            # not yet arrived: expire at its arrival event
+            job.cancel_requested = True
+
+    def _sweep_cancelled(self, node: int, now: float,
+                         out: List[Event]) -> None:
+        """Honour cancel requests against running jobs (window boundary)."""
+        for job in list(self.running[node]):
+            if job.cancel_requested:
+                self.running[node].remove(job)
+                self._terminate(job, node, JobState.CANCELLED, now, out)
+
+    def _on_node_free(self, node: int, now: float, out: List[Event]) -> None:
+        self._sweep_cancelled(node, now, out)
+        batch = self._form_batch(node, now, out)
         if not batch:
             self.node_busy[node] = False
             return
@@ -135,9 +329,17 @@ class ELISFrontend:
         end = now + res.duration
         for job, toks, fin in zip(batch, res.tokens, res.finished):
             job.generated.extend(toks)
+            iteration = job.n_iterations
             job.n_iterations += 1
             if job.first_token_time is None and toks:
                 job.first_token_time = end
+            if toks or fin:
+                chunk = TokenChunk(request_id=job.job_id,
+                                   tokens=tuple(toks), index=iteration,
+                                   t=end, final=fin)
+                if job.stream:
+                    job.chunks.append(chunk)
+                out.append(Event(end, "tokens", job.job_id, chunk))
             if fin:
                 job.finished = True
                 job.state = JobState.FINISHED
@@ -146,11 +348,13 @@ class ELISFrontend:
                 self.running[node].remove(job)
                 self.state.finish_job(node)
                 self.executor.evict(node, job)
+                out.append(Event(end, "finished", job.job_id))
         self._push_event(end, "node_free", node)
         self.node_busy[node] = True
 
     # ------------------------------------------------------------------ #
-    def _form_batch(self, node: int, now: float) -> List[Job]:
+    def _form_batch(self, node: int, now: float,
+                    out: List[Event]) -> List[Job]:
         cap = self.cfg.scheduler.batch_size
         running = self.running[node]
         waiting = self.waiting[node]
@@ -159,6 +363,8 @@ class ELISFrontend:
 
         run_eff = batch_effective(self.policy, running, now) if running else []
         wait_eff = batch_effective(self.policy, waiting, now) if waiting else []
+        # one predictor pass per job per window: step 2 reuses these
+        eff = {j.job_id: e for j, e in zip(waiting, wait_eff)}
 
         # 1. preemption: displace low-priority running jobs (margin-gated)
         swaps = select_preemptions(
@@ -172,16 +378,29 @@ class ELISFrontend:
             victim.record_enqueue(now)
             waiting.append(victim)
             self.executor.evict(node, victim)
+            out.append(Event(now, "preempted", victim.job_id))
+            # freshly re-enqueued at ``now`` ⇒ zero aging, so its effective
+            # priority is exactly the raw priority computed in the pass above
+            eff[victim.job_id] = (victim.priority
+                                  + victim.priority_class * PRIORITY_CLASS_WEIGHT)
+            eff.pop(repl.job_id, None)
             waiting.remove(repl)
             repl.state = JobState.RUNNING
             repl.record_dispatch(now)
             running.append(repl)
 
-        # 2. fill free slots with the best remaining waiters
+        # 2. fill free slots with the best remaining waiters, reusing the
+        #    step-1 priorities (membership changes were patched in above);
+        #    the backend's own capacity bounds admissions when it is tighter
+        #    than the configured batch size
         free = cap - len(running)
+        fc = getattr(self.executor, "free_capacity", None)
+        backend_free = fc(node) if fc is not None else None
+        if backend_free is not None:
+            free = min(free, backend_free)
         if free > 0 and waiting:
             order = sorted(
-                zip(batch_effective(self.policy, waiting, now), itertools.count(), waiting)
+                (eff[job.job_id], k, job) for k, job in enumerate(waiting)
             )
             for _, _, job in order[:free]:
                 waiting.remove(job)

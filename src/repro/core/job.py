@@ -9,7 +9,10 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import TYPE_CHECKING, List, Optional
+
+if TYPE_CHECKING:
+    from repro.core.api import TokenChunk
 
 
 class JobState(enum.Enum):
@@ -17,6 +20,14 @@ class JobState(enum.Enum):
     RUNNING = "running"      # inside a backend batch
     PREEMPTED = "preempted"  # evicted mid-generation; resumes from tokens
     FINISHED = "finished"
+    CANCELLED = "cancelled"  # caller cancelled; slot released
+    EXPIRED = "expired"      # deadline passed before completion
+
+
+#: states a job never leaves
+TERMINAL_STATES = frozenset(
+    {JobState.FINISHED, JobState.CANCELLED, JobState.EXPIRED}
+)
 
 
 @dataclass
@@ -39,6 +50,20 @@ class Job:
 
     generated: List[int] = field(default_factory=list)
     finished: bool = False
+
+    # request-lifecycle fields (populated from api.RequestOptions)
+    #: absolute deadline on the serving clock; None = no deadline
+    deadline: Optional[float] = None
+    tenant: str = "default"
+    #: coarse priority band (lower outranks higher regardless of length)
+    priority_class: int = 0
+    #: caller asked for cancellation; honoured at the next window boundary
+    cancel_requested: bool = False
+    #: retain per-iteration TokenChunks for a streaming consumer (bounded
+    #: memory: non-streaming jobs keep only the flat ``generated`` list)
+    stream: bool = False
+    #: per-iteration token emissions, populated only when ``stream`` is set
+    chunks: List["TokenChunk"] = field(default_factory=list)
 
     # timing
     first_dispatch_time: Optional[float] = None

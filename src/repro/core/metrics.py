@@ -9,6 +9,18 @@ from repro.core.job import Job
 
 
 def summarize(jobs: Sequence[Job]) -> Dict[str, float]:
+    """Aggregate JCT/queuing/throughput metrics over finished jobs (or
+    Response records — anything with the same timing surface)."""
+    if not jobs:
+        # zero requests finished (all cancelled/expired): report an empty
+        # but well-formed summary rather than crashing the caller
+        keys = ("jct_mean", "jct_p50", "jct_p99", "jct_min", "jct_max",
+                "queuing_delay_mean", "throughput_rps", "makespan",
+                "ttft_mean")
+        out: Dict[str, float] = {k: 0.0 for k in keys}
+        out["n"] = 0
+        out["preemptions"] = 0
+        return out
     jcts = np.array([j.jct() for j in jobs])
     qd = np.array([j.queuing_delay for j in jobs])
     makespan = max(j.finish_time for j in jobs) - min(

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.frontend import ExecResult
+from repro.core.frontend import Backend, ExecResult
 from repro.core.job import Job
 from repro.data.tokenizer import EOS_ID, PAD_ID
 from repro.engine.sampler import SamplerConfig, sample
@@ -61,7 +61,9 @@ def _slot_update(big, small, slot: int):
 class InferenceEngine:
     """One backend worker's execution engine (one model, N slots)."""
 
-    def __init__(self, model_cfg, params, cfg: EngineConfig = EngineConfig()):
+    def __init__(self, model_cfg, params, cfg: Optional[EngineConfig] = None):
+        if cfg is None:
+            cfg = EngineConfig()
         self.model_cfg = model_cfg
         self.params = params
         self.cfg = cfg
@@ -212,16 +214,22 @@ class InferenceEngine:
 
 
 # --------------------------------------------------------------------------- #
-# Executor adapter for the ELIS frontend
+# Backend adapter for the ELIS frontend
 # --------------------------------------------------------------------------- #
 
 
-class EngineExecutor:
-    """Wraps per-node InferenceEngines behind the frontend Executor protocol.
+class EngineExecutor(Backend):
+    """Wraps per-node InferenceEngines behind the frontend Backend ABC.
     Durations are measured wall-clock — the live-system evaluation mode."""
 
     def __init__(self, engines: Dict[int, InferenceEngine]):
         self.engines = engines
+
+    def capacity(self, node: int) -> int:
+        return self.engines[node].cfg.max_slots
+
+    def free_capacity(self, node: int) -> int:
+        return self.engines[node].free_slots()
 
     def execute(self, node: int, jobs: Sequence[Job], window: int,
                 now: float) -> ExecResult:

@@ -21,12 +21,13 @@ import numpy as np
 from repro.configs import get_config, list_archs
 from repro.core import (
     BGEPredictor,
-    ELISFrontend,
+    ElisServer,
     FrontendConfig,
-    Job,
     OraclePredictor,
     PredictorConfig,
     PreemptionConfig,
+    Request,
+    RequestOptions,
     SchedulerConfig,
     summarize,
 )
@@ -37,32 +38,32 @@ from repro.models.encoder import EncoderArchConfig
 from repro.training import latest_step, restore_checkpoint
 
 
-def load_jobs(args):
+def load_requests(args):
     if args.trace:
-        jobs = []
+        reqs = []
         for line in open(args.trace):
             r = json.loads(line)
-            jobs.append(Job(
-                job_id=r["request_id"], prompt=r["prompt"],
+            reqs.append(Request(
+                request_id=r["request_id"], prompt=r["prompt"],
                 prompt_tokens=r["prompt_tokens"],
                 arrival_time=r["arrival_time"],
-                true_output_len=min(r.get("max_tokens", args.max_output),
-                                    args.max_output),
+                true_output_len=r.get("max_tokens", args.max_output),
+                options=RequestOptions(max_tokens=args.max_output,
+                                       deadline=r.get("deadline")),
             ))
-        return jobs
+        return reqs
     gen = WorkloadGenerator(seed=args.seed)
     rng = np.random.RandomState(args.seed)
     times = GammaArrivals().rate_scaled(args.rate).sample_arrival_times(
         args.n, rng)
-    jobs = []
+    reqs = []
     for i, t in enumerate(times):
         r = gen.sample_request()
-        jobs.append(Job(job_id=i, prompt=r.prompt,
-                        prompt_tokens=r.prompt_tokens,
-                        arrival_time=float(t),
-                        true_output_len=min(r.true_output_len,
-                                            args.max_output)))
-    return jobs
+        reqs.append(Request(
+            request_id=i, prompt=r.prompt, prompt_tokens=r.prompt_tokens,
+            arrival_time=float(t), true_output_len=r.true_output_len,
+            options=RequestOptions(max_tokens=args.max_output)))
+    return reqs
 
 
 def build_predictor(args):
@@ -115,7 +116,7 @@ def main() -> None:
     }
     predictor = (None if args.policy in ("fcfs", "mlfq")
                  else build_predictor(args))
-    frontend = ELISFrontend(
+    server = ElisServer(
         FrontendConfig(
             n_nodes=args.workers,
             scheduler=SchedulerConfig(policy=args.policy, window=args.window,
@@ -125,23 +126,25 @@ def main() -> None:
         predictor,
         EngineExecutor(engines),
     )
-    jobs = load_jobs(args)
-    for j in jobs:
-        frontend.submit(j)
-    done = frontend.run()
-    for j in sorted(done, key=lambda j: j.job_id):
+    for r in load_requests(args):
+        server.submit(r)
+    responses = server.drain()
+    for r in sorted(responses, key=lambda r: r.request_id):
         print(json.dumps({
-            "request_id": j.job_id,
-            "node": j.node,
-            "n_tokens": j.tokens_generated,
-            "jct_s": round(j.jct(), 3),
-            "queuing_delay_s": round(j.queuing_delay, 3),
-            "preemptions": j.n_preemptions,
+            "request_id": r.request_id,
+            "node": r.node,
+            "status": r.status.value,
+            "n_tokens": r.n_tokens,
+            "jct_s": round(r.jct(), 3),
+            "queuing_delay_s": round(r.queuing_delay, 3),
+            "preemptions": r.n_preemptions,
         }))
-    m = summarize(done)
+    finished = [r for r in responses if r.ok]
+    m = summarize(finished)
     print(f"[serve] mean JCT {m['jct_mean']:.2f}s  queue "
           f"{m['queuing_delay_mean']:.2f}s  throughput "
-          f"{m['throughput_rps']:.2f} req/s", file=sys.stderr)
+          f"{m['throughput_rps']:.2f} req/s  "
+          f"({len(finished)}/{len(responses)} finished)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Discrete-event cluster executor.
 
-Implements the frontend's ``Executor`` protocol with virtual time and the
+Implements the frontend's ``Backend`` ABC with virtual time and the
 calibrated latency model.  Replays each job's pre-generated response token
 stream (the simulator never invents tokens — ground truth lives with the
 workload generator), tracks per-node KV residency for preemption/recompute
@@ -9,15 +9,15 @@ accounting, and enforces the Appendix-A memory capacity.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Set
+from typing import Dict, List, Optional, Sequence, Set
 
-from repro.core.frontend import ExecResult
+from repro.core.frontend import Backend, ExecResult
 from repro.core.job import Job
 from repro.simulate.profiles import SCHED_OVERHEAD_MS, ModelProfile
 
 
 @dataclass
-class SimExecutor:
+class SimExecutor(Backend):
     profile: ModelProfile
     #: include the paper's measured 11.04 ms scheduling overhead per iteration
     sched_overhead_s: float = SCHED_OVERHEAD_MS / 1000.0
@@ -39,6 +39,14 @@ class SimExecutor:
 
     def resident_token_count(self, node: int) -> int:
         return sum(self._resident_tokens.get(node, {}).values())
+
+    def capacity(self, node: int) -> Optional[int]:
+        # job count is unbounded in the simulator; residency is bounded by
+        # KV *tokens* (Appendix-A memory model), enforced inside execute()
+        return None
+
+    def free_capacity(self, node: int) -> Optional[int]:
+        return None
 
     # ------------------------------------------------------------------ #
     def execute(self, node: int, jobs: Sequence[Job], window: int,

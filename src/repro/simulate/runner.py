@@ -7,7 +7,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import (
-    ELISFrontend,
+    ElisServer,
     FrontendConfig,
     Job,
     NoisyOraclePredictor,
@@ -16,6 +16,7 @@ from repro.core import (
     SchedulerConfig,
     summarize,
 )
+from repro.core import api
 from repro.data.arrivals import GammaArrivals
 from repro.data.workload import Request, WorkloadGenerator
 from repro.simulate.executor import SimExecutor
@@ -98,14 +99,15 @@ def run_experiment(cfg: ExperimentConfig, *, bge=None,
         preemption=cfg.preemption,
     )
     executor = SimExecutor(profile)
-    frontend = ELISFrontend(fe_cfg, predictor, executor)
-    jobs = requests_to_jobs(requests)
-    for j in jobs:
-        frontend.submit(j)
-    done = frontend.run()
-    assert len(done) == len(jobs), (len(done), len(jobs))
+    server = ElisServer(fe_cfg, predictor, executor)
+    for r in requests:
+        server.submit(api.Request.from_workload(r))
+    responses = server.drain()
+    done = [r for r in responses if r.ok]
     m = summarize(done)
     m["mem_preemptions"] = executor.mem_preemptions
+    m["n_finished"] = len(done)
+    m["n_unfinished"] = len(responses) - len(done)
     return m
 
 

@@ -1,0 +1,55 @@
+"""Minimal stand-in for the ``hypothesis`` property-testing package.
+
+Activated by ``tests/conftest.py`` ONLY when the real package is not
+installed (this container cannot pip-install).  It implements just the
+surface the test-suite uses — ``@given``/``@settings`` with the strategies
+in :mod:`tests._shims.hypothesis.strategies` — by drawing a fixed number of
+pseudo-random examples from a deterministically seeded RNG.  No shrinking,
+no example database; failures report the drawn arguments via the normal
+assertion traceback.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+from . import strategies  # noqa: F401  (imported for `from hypothesis import strategies`)
+
+__version__ = "0.0-shim"
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Decorator recording example-count settings on the test function."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Decorator: call the test with examples drawn from the strategies."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(0xE1157)
+            for _ in range(n):
+                drawn = [s.example(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example(rng)
+                            for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # hide the drawn parameters from pytest's fixture resolution
+        wrapper.__signature__ = inspect.Signature()
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return deco

@@ -1,0 +1,83 @@
+"""Strategies for the hypothesis shim — random draws, no shrinking.
+
+Each strategy exposes ``example(rng)`` drawing one value from a
+``random.Random`` instance owned by ``@given``.
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], object]):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive for shim")
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 16) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def characters(min_codepoint: int = 32, max_codepoint: int = 126,
+               **_) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: chr(rng.randint(min_codepoint, max_codepoint)))
+
+
+def text(alphabet: SearchStrategy = None, min_size: int = 0,
+         max_size: int = 20) -> SearchStrategy:
+    alpha = alphabet if alphabet is not None else characters()
+    return SearchStrategy(lambda rng: "".join(
+        alpha.example(rng)
+        for _ in range(rng.randint(min_size, max_size))))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 20) -> SearchStrategy:
+    return SearchStrategy(lambda rng: [
+        elements.example(rng)
+        for _ in range(rng.randint(min_size, max_size))])
+
+
+def sampled_from(options: Sequence) -> SearchStrategy:
+    opts = list(options)
+    return SearchStrategy(lambda rng: opts[rng.randrange(len(opts))])
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: strategies[rng.randrange(len(strategies))].example(rng))
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.example(rng) for s in strategies))

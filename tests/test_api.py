@@ -1,0 +1,359 @@
+"""Online serving API: request lifecycle, streaming, cancellation, deadlines,
+and steppable-frontend equivalence with the legacy drain-once path."""
+from typing import Sequence
+
+import pytest
+
+from repro.core import (
+    ELISFrontend,
+    ElisServer,
+    ExecResult,
+    FrontendConfig,
+    Job,
+    OraclePredictor,
+    PreemptionConfig,
+    Request,
+    RequestOptions,
+    RequestStatus,
+    SchedulerConfig,
+)
+from repro.core.frontend import Backend
+
+
+class RecordingBackend(Backend):
+    """Deterministic backend: every window takes 1s, emits token id 7.
+    Tracks per-node residency so tests can assert slots are freed."""
+
+    def __init__(self, slots: int = 4):
+        self.slots = slots
+        self.resident = {}  # node -> set(job_id)
+        self.calls = []
+        self.evictions = []
+
+    def execute(self, node, jobs: Sequence[Job], window, now) -> ExecResult:
+        res = self.resident.setdefault(node, set())
+        self.calls.append((now, node, [j.job_id for j in jobs]))
+        toks, fin = [], []
+        for j in jobs:
+            res.add(j.job_id)
+            n = min(window, j.true_output_len - j.tokens_generated)
+            toks.append([7] * n)
+            fin.append(j.tokens_generated + n >= j.true_output_len)
+        return ExecResult(1.0, toks, fin)
+
+    def evict(self, node, job):
+        self.evictions.append(job.job_id)
+        self.resident.setdefault(node, set()).discard(job.job_id)
+
+    def capacity(self, node):
+        return self.slots
+
+    def free_capacity(self, node):
+        return self.slots - len(self.resident.get(node, ()))
+
+
+def make_server(policy="fcfs", batch=2, window=50, preempt=False,
+                slots=4, n_nodes=1):
+    backend = RecordingBackend(slots=slots)
+    server = ElisServer(
+        FrontendConfig(
+            n_nodes=n_nodes,
+            scheduler=SchedulerConfig(policy=policy, window=window,
+                                      batch_size=batch),
+            preemption=PreemptionConfig(enabled=preempt, margin=10,
+                                        max_fraction=1.0),
+        ),
+        OraclePredictor() if policy in ("sjf", "isrtf") else None,
+        backend,
+    )
+    return server, backend
+
+
+def req(i, length, arrival=0.0, **opts):
+    return Request(prompt=f"p{i}", prompt_tokens=[1, 2], arrival_time=arrival,
+                   request_id=i, true_output_len=length,
+                   options=RequestOptions(**opts))
+
+
+# --------------------------------------------------------------------------- #
+# basic lifecycle
+# --------------------------------------------------------------------------- #
+
+
+def test_submit_returns_handle_and_response_is_not_a_job():
+    server, _ = make_server()
+    h = server.submit(req(0, 75))
+    assert h.status is RequestStatus.QUEUED and not h.done
+    [r] = server.drain()
+    assert h.status is RequestStatus.FINISHED and h.done
+    assert r.status is RequestStatus.FINISHED and r.ok
+    assert not isinstance(r, Job) and not isinstance(h, Job)
+    assert r.n_tokens == 75
+    assert r.n_iterations == 2          # 50 + 25
+    assert r.jct() == pytest.approx(2.0)
+    assert h.result() == r
+
+
+def test_duplicate_request_id_rejected():
+    server, _ = make_server()
+    server.submit(req(5, 10))
+    with pytest.raises(ValueError):
+        server.submit(req(5, 10))
+
+
+def test_max_tokens_caps_generation():
+    server, _ = make_server()
+    h = server.submit(req(0, 120, max_tokens=60))
+    server.drain()
+    assert h.result().n_tokens == 60
+
+
+# --------------------------------------------------------------------------- #
+# streaming
+# --------------------------------------------------------------------------- #
+
+
+def test_streaming_chunks_arrive_in_generation_order():
+    server, _ = make_server(batch=2)
+    h0 = server.submit(req(0, 120, stream=True))
+    server.submit(req(1, 80))
+    chunks = list(server.stream(h0))
+    assert chunks, "stream produced no chunks"
+    assert [c.index for c in chunks] == sorted(c.index for c in chunks)
+    assert all(c.request_id == 0 for c in chunks)
+    # chunk times never go backwards
+    assert all(a.t <= b.t for a, b in zip(chunks, chunks[1:]))
+    # exactly one final chunk, and it is the last one
+    assert [c.final for c in chunks].count(True) == 1 and chunks[-1].final
+    # concatenation equals the terminal response stream
+    server.drain()
+    flat = [t for c in chunks for t in c.tokens]
+    assert tuple(flat) == h0.result().tokens
+    assert len(flat) == 120
+
+
+def test_stream_of_finished_request_replays_chunks():
+    server, _ = make_server()
+    h = server.submit(req(0, 75, stream=True))
+    server.drain()
+    chunks = list(server.stream(h))
+    assert len(chunks) == 2 and chunks[-1].final
+
+
+def test_stream_requires_stream_option():
+    server, _ = make_server()
+    h = server.submit(req(0, 75))          # stream not requested
+    server.drain()
+    with pytest.raises(ValueError):
+        next(server.stream(h))
+    # non-streaming requests retain no chunks (bounded memory)
+    assert server.frontend.jobs[0].chunks == []
+
+
+def test_release_drops_terminal_request_records():
+    server, _ = make_server()
+    h = server.submit(req(0, 75))
+    assert not server.release(h)           # still live
+    server.drain()
+    assert server.release(h)
+    assert server.frontend.jobs == {} and server.frontend.finished == []
+    with pytest.raises(KeyError):
+        server.status(h)
+    assert not server.release(h)           # already released
+
+
+# --------------------------------------------------------------------------- #
+# cancellation
+# --------------------------------------------------------------------------- #
+
+
+def test_cancel_waiting_job_frees_load_and_never_finishes():
+    server, backend = make_server(batch=1)
+    server.submit(req(0, 100))
+    h1 = server.submit(req(1, 100))
+    server.step()          # arrival 0
+    server.step()          # arrival 1 (queued behind 0, batch=1)
+    assert server.cancel(h1)
+    assert h1.status is RequestStatus.CANCELLED
+    responses = server.drain()
+    assert {r.request_id: r.status for r in responses} == {
+        0: RequestStatus.FINISHED, 1: RequestStatus.CANCELLED}
+    # the cancelled job never executed and holds no backend residency
+    assert all(1 not in ids for _, _, ids in backend.calls)
+    assert 1 not in backend.resident.get(0, ())
+    # load-balancer count released
+    assert server.frontend.state.active_jobs[0] == 0
+    # cancel of a terminal request is a no-op
+    assert not server.cancel(h1)
+
+
+def test_cancel_running_job_evicts_and_frees_slot():
+    server, backend = make_server(batch=1, window=10)
+    h = server.submit(req(0, 100))
+    # step until the first window has executed
+    while not backend.calls:
+        server.step()
+    assert h.status is RequestStatus.RUNNING
+    assert server.cancel(h)
+    server.drain()
+    assert h.status is RequestStatus.CANCELLED
+    r = h.result()
+    assert r.status is RequestStatus.CANCELLED and not r.ok
+    assert 0 < r.n_tokens < 100          # partial output retained
+    assert 0 in backend.evictions        # slot released through the backend
+    assert backend.resident.get(0, set()) == set()
+    assert backend.free_capacity(0) == backend.slots
+    # a cancelled job is terminal CANCELLED, never FINISHED
+    assert all(j.job_id != 0 for j in server.frontend.finished)
+
+
+def test_cancel_before_arrival():
+    server, backend = make_server()
+    h = server.submit(req(0, 50, arrival=5.0))
+    assert server.cancel(h)
+    server.drain()
+    assert h.status is RequestStatus.CANCELLED
+    assert backend.calls == []
+
+
+# --------------------------------------------------------------------------- #
+# deadlines
+# --------------------------------------------------------------------------- #
+
+
+def test_deadline_expiry_marks_expired_and_frees_slot():
+    server, backend = make_server(batch=1, window=10)
+    # 1s per 10-token window -> needs 10s; deadline at 3.5s
+    h = server.submit(req(0, 100, deadline=3.5))
+    server.drain()
+    assert h.status is RequestStatus.EXPIRED
+    r = h.result()
+    assert r.status is RequestStatus.EXPIRED
+    assert r.finish_time == pytest.approx(3.5)
+    assert 0 < r.n_tokens < 100
+    assert 0 in backend.evictions
+    assert backend.resident.get(0, set()) == set()
+
+
+def test_deadline_expiry_while_queued():
+    server, _ = make_server(batch=1)
+    server.submit(req(0, 500))                      # hogs the only slot
+    h = server.submit(req(1, 50, deadline=2.0))     # expires in the queue
+    server.drain()
+    assert h.status is RequestStatus.EXPIRED
+    assert h.result().n_tokens == 0
+
+
+def test_deadline_after_finish_is_harmless():
+    server, _ = make_server()
+    h = server.submit(req(0, 40, deadline=100.0))
+    [r] = server.drain()
+    assert r.status is RequestStatus.FINISHED
+    assert h.status is RequestStatus.FINISHED
+
+
+# --------------------------------------------------------------------------- #
+# steppable frontend: step / run_until / late submit
+# --------------------------------------------------------------------------- #
+
+
+def _legacy_jcts(lens, arrivals, *, policy="fcfs", batch=2):
+    """Drain-once reference on the legacy Job-level frontend."""
+    fe = ELISFrontend(
+        FrontendConfig(
+            n_nodes=1,
+            scheduler=SchedulerConfig(policy=policy, window=50,
+                                      batch_size=batch),
+            preemption=PreemptionConfig(enabled=policy != "fcfs", margin=10,
+                                        max_fraction=1.0),
+        ),
+        OraclePredictor() if policy in ("sjf", "isrtf") else None,
+        RecordingBackend(),
+    )
+    for i, (l, a) in enumerate(zip(lens, arrivals)):
+        fe.submit(Job(job_id=i, prompt=f"p{i}", prompt_tokens=[1, 2],
+                      arrival_time=a, true_output_len=l))
+    return {j.job_id: j.jct() for j in fe.run()}
+
+
+@pytest.mark.parametrize("policy", ["fcfs", "isrtf"])
+def test_interleaved_step_run_until_matches_single_run(policy):
+    lens = [120, 60, 200, 50, 90]
+    arrivals = [0.0, 0.5, 1.0, 4.0, 6.5]
+    want = _legacy_jcts(lens, arrivals, policy=policy)
+
+    server, _ = make_server(policy=policy, batch=2,
+                            preempt=(policy != "fcfs"))
+    # late submission: requests enter the open loop as time advances,
+    # always before their arrival times are reached
+    server.submit(req(0, lens[0], arrival=arrivals[0]))
+    server.submit(req(1, lens[1], arrival=arrivals[1]))
+    server.run_until(0.75)
+    server.submit(req(2, lens[2], arrival=arrivals[2]))
+    server.run_until(3.0)
+    server.submit(req(3, lens[3], arrival=arrivals[3]))
+    for _ in range(3):
+        server.step(5.0)       # bounded stepping, then a late submit
+    server.submit(req(4, lens[4], arrival=arrivals[4]))
+    responses = server.drain()
+
+    got = {r.request_id: r.jct() for r in responses}
+    assert got == pytest.approx(want)
+
+
+def test_interleaved_with_cancel_matches_legacy_without_the_cancelled_job():
+    # FCFS batch=1: job 3 arrives last and is cancelled while queued, so the
+    # remaining jobs' schedule must match a legacy run that never saw job 3
+    lens, arrivals = [100, 60, 80, 50], [0.0, 0.1, 0.2, 0.3]
+    want = _legacy_jcts(lens[:3], arrivals[:3], batch=1)
+
+    server, _ = make_server(batch=1)
+    handles = [server.submit(req(i, l, arrival=a))
+               for i, (l, a) in enumerate(zip(lens, arrivals))]
+    server.run_until(1.0)                 # all arrived; 3 still queued
+    assert server.cancel(handles[3])
+    responses = server.drain()
+    got = {r.request_id: r.jct() for r in responses if r.ok}
+    assert got == pytest.approx(want)
+    assert handles[3].status is RequestStatus.CANCELLED
+
+
+def test_step_respects_now_and_clock_advances():
+    server, backend = make_server()
+    server.submit(req(0, 50, arrival=2.0))
+    assert server.step(1.0) == []         # arrival not due yet
+    assert server.now == 1.0
+    assert backend.calls == []
+    server.run_until(2.0)                 # arrival + dispatch due
+    assert backend.calls and server.now == 2.0
+
+
+def test_late_submit_before_past_arrival_is_clamped():
+    server, _ = make_server()
+    server.run_until(10.0)
+    h = server.submit(req(0, 50, arrival=1.0))    # arrival in the past
+    [r] = server.drain()
+    assert r.ok
+    # admitted at the current clock, not retroactively
+    assert r.finish_time >= 10.0
+
+
+def test_priority_class_outranks_predicted_length():
+    # isrtf, batch=1: the long class-0 job beats the short class-1 job
+    server, _ = make_server(policy="isrtf", batch=1)
+    h_long = server.submit(req(0, 150, priority_class=0))
+    h_short = server.submit(req(1, 50, priority_class=1))
+    server.drain()
+    assert h_long.result().finish_time < h_short.result().finish_time
+
+
+def test_events_surface_lifecycle_transitions():
+    server, _ = make_server(batch=1, window=50)
+    h = server.submit(req(0, 75, deadline=50.0))
+    kinds = []
+    while server.pending():
+        kinds.extend(e.kind for e in server.step())
+    assert kinds[0] == "arrival"
+    assert "tokens" in kinds and "finished" in kinds
+    assert "expired" not in kinds
+    assert h.status is RequestStatus.FINISHED
