@@ -89,6 +89,25 @@ def aging_ablation(quick: bool = False):
     return rows
 
 
+def repredict_stride_ablation(quick: bool = False):
+    """Prediction staleness (SchedulerConfig.repredict_every): how much JCT
+    does ISRTF give back when the encoder runs every N windows instead of
+    every window (ALISE-style cached predictions decayed by progress)?"""
+    n_req = 100 if quick else 200
+    rows = []
+    for stride in (1, 2, 4, 8):
+        cfg = ExperimentConfig(model="lam13", n_requests=n_req, batch_size=4,
+                               rps_multiple=3.0, seed=24, policy="isrtf",
+                               repredict_every=stride)
+        m = run_experiment(cfg)
+        rows.append({
+            "repredict_every": stride,
+            "jct_mean": round(m["jct_mean"], 2),
+            "jct_p99": round(m["jct_p99"], 2),
+        })
+    return rows
+
+
 def run(quick: bool = False):
     rows = []
     rows += [{"ablation": "predictor_quality", **r}
@@ -96,6 +115,8 @@ def run(quick: bool = False):
     rows += [{"ablation": "mlfq_comparison", **r}
              for r in mlfq_comparison(quick)]
     rows += [{"ablation": "aging", **r} for r in aging_ablation(quick)]
+    rows += [{"ablation": "repredict_stride", **r}
+             for r in repredict_stride_ablation(quick)]
     save_results("ablations", rows)
     return rows
 

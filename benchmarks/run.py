@@ -29,6 +29,7 @@ def main() -> None:
         fig7_scalability,
         live_engine,
         roofline,
+        scheduler_overhead,
         table2_predictor,
         table5_jct,
     )
@@ -46,6 +47,11 @@ def main() -> None:
         ("fig2_iterative_mae", fig2_iterative_mae.run,
          lambda rows: "mae_by_step=" + "/".join(
              f"{r['mae']:.0f}" for r in rows)),
+        ("scheduler_overhead", scheduler_overhead.run,
+         lambda rows: "isrtf_one_dispatch_per_window=" + str(all(
+             r["dispatches"] == r["windows"] for r in rows
+             if r["policy"] == "isrtf" and r["repredict_every"] == 1))
+         + ";max_traces=" + str(max(r.get("num_traces", 0) for r in rows))),
         ("table5_jct", table5_jct.run,
          lambda rows: f"mean_isrtf_gain_pct={sum(r['isrtf_vs_fcfs_pct'] for r in rows)/len(rows):.1f}"),
         ("fig6_batch_sizes", fig6_batch_sizes.run,

@@ -8,6 +8,12 @@ One implementation drives both backends:
 
 Semantics (faithful to the paper):
   * iteration-level batching with a fixed window of K=50 tokens;
+  * ONE fused scoring pass per window: ``running + waiting`` are scored in
+    a single :func:`repro.core.scheduler.score_pool` call (one batched,
+    shape-bucketed predictor dispatch), split back into per-queue
+    priorities; ``SchedulerConfig.repredict_every`` stretches the encoder
+    cadence — between full re-scores a job reuses its cached prediction
+    decayed by the tokens generated since it was scored;
   * per-node PriorityBuffer; greedy min-load balancing at arrival;
   * slot *stickiness*: a running job keeps its batch slot until it finishes —
     unless the preemption policy displaces it (FCFS ⇒ non-preemptive ORCA
@@ -21,7 +27,9 @@ Online extensions (paper §4.1, "continuously admits requests"):
     late ``submit``/``cancel`` calls instead of the drain-once ``run``;
   * cancellation and deadline expiry flow through the scheduler: the job is
     evicted from its backend (releasing the slot) and surfaces as a terminal
-    ``CANCELLED``/``EXPIRED`` state;
+    ``CANCELLED``/``EXPIRED`` state; expiry is enforced at the window
+    boundary — tokens a window would deliver past the deadline are dropped,
+    so no job ever finishes with ``finish_time > deadline``;
   * every window emits per-job :class:`~repro.core.api.TokenChunk`\\ s, the
     unit of streaming.
 """
@@ -38,12 +46,25 @@ from repro.core.job import TERMINAL_STATES, Job, JobState
 from repro.core.load_balancer import GlobalState, LoadBalancer
 from repro.core.predictor import Predictor
 from repro.core.scheduler import (
+    PRIORITY_CLASS_WEIGHT,
     Policy,
     PreemptionConfig,
     SchedulerConfig,
+    batch_effective,
+    cached_raw_priority,
+    effective_priority,
     make_policy,
+    score_pool,
     select_preemptions,
 )
+
+__all__ = [
+    "Backend", "ELISFrontend", "Event", "ExecResult", "Executor",
+    "FrontendConfig",
+    # re-exported for callers that historically imported these from here —
+    # the implementations now live in repro.core.scheduler
+    "PRIORITY_CLASS_WEIGHT", "batch_effective",
+]
 
 
 class ExecResult:
@@ -108,36 +129,6 @@ class FrontendConfig:
     preemption: PreemptionConfig = field(default_factory=PreemptionConfig)
 
 
-#: effective-priority penalty per priority class — large enough that class
-#: bands never interleave for any realistic predicted length (tokens)
-PRIORITY_CLASS_WEIGHT = 1e7
-
-
-def batch_effective(policy: Policy, jobs: Sequence[Job], now: float) -> List[float]:
-    """Assign priorities to ``jobs`` (batched through the predictor when it
-    supports it) and return effective (aging-adjusted) priorities."""
-    pred = policy.predictor
-    if (
-        policy.name == "isrtf"
-        and pred is not None
-        and hasattr(pred, "predict_jobs")
-        and len(jobs) > 1
-    ):
-        raw = pred.predict_jobs(jobs)
-        pris = [float(r) for r in raw]
-    else:
-        pris = [policy.priority(j, now) for j in jobs]
-    out = []
-    for j, p in zip(jobs, pris):
-        j.priority = p
-        j.predictions.append(p)
-        eff = p + j.priority_class * PRIORITY_CLASS_WEIGHT
-        if policy.cfg.aging_rate > 0 and j.last_enqueue_time is not None:
-            eff -= policy.cfg.aging_rate * max(now - j.last_enqueue_time, 0.0)
-        out.append(eff)
-    return out
-
-
 class ELISFrontend:
     def __init__(self, cfg: FrontendConfig, predictor: Optional[Predictor],
                  executor: Executor):
@@ -150,6 +141,9 @@ class ELISFrontend:
         self.waiting: Dict[int, List[Job]] = {n: [] for n in range(cfg.n_nodes)}
         self.running: Dict[int, List[Job]] = {n: [] for n in range(cfg.n_nodes)}
         self.node_busy: Dict[int, bool] = {n: False for n in range(cfg.n_nodes)}
+        #: scheduling windows formed per node — drives the re-prediction
+        #: stride (``SchedulerConfig.repredict_every``)
+        self._windows: Dict[int, int] = {n: 0 for n in range(cfg.n_nodes)}
         self.finished: List[Job] = []
         #: cancelled + expired jobs (terminal but not FINISHED)
         self.terminated: List[Job] = []
@@ -328,6 +322,16 @@ class ELISFrontend:
                                     self.cfg.scheduler.window, now)
         end = now + res.duration
         for job, toks, fin in zip(batch, res.tokens, res.finished):
+            if job.deadline is not None and end > job.deadline:
+                # the window straddles the deadline: its tokens materialise
+                # at the window boundary ``end``, i.e. past the deadline —
+                # drop them and expire the job at the deadline instead of
+                # letting it FINISH with finish_time > deadline (the pending
+                # deadline event would fire too late to stop that)
+                self.running[node].remove(job)
+                self._terminate(job, node, JobState.EXPIRED, job.deadline,
+                                out)
+                continue
             job.generated.extend(toks)
             iteration = job.n_iterations
             job.n_iterations += 1
@@ -361,10 +365,25 @@ class ELISFrontend:
         if not running and not waiting:
             return []
 
-        run_eff = batch_effective(self.policy, running, now) if running else []
-        wait_eff = batch_effective(self.policy, waiting, now) if waiting else []
-        # one predictor pass per job per window: step 2 reuses these
+        # ONE fused predictor pass over running + waiting per window (two
+        # separate dispatches would double the per-window predictor latency
+        # sitting on the scheduling critical path); every repredict_every-th
+        # window is a full re-score, in between cached predictions are
+        # decayed by progress (new arrivals are still scored fresh)
+        widx = self._windows[node]
+        self._windows[node] = widx + 1
+        stride = max(self.cfg.scheduler.repredict_every, 1)
+        run_eff, wait_eff = score_pool(self.policy, running, waiting, now,
+                                       full=(widx % stride == 0))
+        # step 2 reuses these (no second scoring pass)
         eff = {j.job_id: e for j, e in zip(waiting, wait_eff)}
+
+        # backend capacity snapshot BEFORE preemption: a swap is net-zero on
+        # residency (victim evicted now, replacement occupies the slot at
+        # dispatch), so reading free_capacity after the evictions would
+        # double-count the freed slots and overfill the backend
+        fc = getattr(self.executor, "free_capacity", None)
+        backend_free = fc(node) if fc is not None else None
 
         # 1. preemption: displace low-priority running jobs (margin-gated)
         swaps = select_preemptions(
@@ -379,10 +398,12 @@ class ELISFrontend:
             waiting.append(victim)
             self.executor.evict(node, victim)
             out.append(Event(now, "preempted", victim.job_id))
-            # freshly re-enqueued at ``now`` ⇒ zero aging, so its effective
-            # priority is exactly the raw priority computed in the pass above
-            eff[victim.job_id] = (victim.priority
-                                  + victim.priority_class * PRIORITY_CLASS_WEIGHT)
+            # freshly re-enqueued at ``now`` ⇒ zero aging: re-band the same
+            # (possibly stale-decayed) raw priority this window's scoring
+            # pass used — NOT the undecayed cached prediction, which would
+            # rank the victim inconsistently against stale-scored waiters
+            eff[victim.job_id] = effective_priority(
+                self.cfg.scheduler, victim, cached_raw_priority(victim), now)
             eff.pop(repl.job_id, None)
             waiting.remove(repl)
             repl.state = JobState.RUNNING
@@ -394,8 +415,6 @@ class ELISFrontend:
         #    the backend's own capacity bounds admissions when it is tighter
         #    than the configured batch size
         free = cap - len(running)
-        fc = getattr(self.executor, "free_capacity", None)
-        backend_free = fc(node) if fc is not None else None
         if backend_free is not None:
             free = min(free, backend_free)
         if free > 0 and waiting:

@@ -45,8 +45,13 @@ class Job:
     state: JobState = JobState.WAITING
     #: scheduler priority = predicted remaining tokens (lower runs first)
     priority: Optional[float] = None
-    #: prediction history, one entry per scheduling iteration (paper Fig. 2)
+    #: prediction history, one entry per scored scheduling iteration
+    #: (paper Fig. 2; every window at ``repredict_every=1``)
     predictions: List[float] = field(default_factory=list)
+    #: ``tokens_generated`` at the last fresh score — between full re-scores
+    #: (``SchedulerConfig.repredict_every``) the scheduler reuses
+    #: ``priority - (tokens_generated - tokens_at_last_score)``
+    tokens_at_last_score: Optional[int] = None
 
     generated: List[int] = field(default_factory=list)
     finished: bool = False

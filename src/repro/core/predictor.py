@@ -16,7 +16,13 @@ Three implementations behind one protocol:
   running the real encoder for every virtual request would dominate runtime.
 
 ``Predictor.init(job)`` / ``Predictor.iter(job)`` mirror Algorithm 1
-lines 11–14.
+lines 11–14.  The scheduler's hot path goes through the batched
+``predict_jobs`` instead: one *shape-bucketed* dispatch per scheduling
+window (batch padded to power-of-two buckets, sequence to the
+``seq_bucket`` ladder) so the jitted apply compiles once per bucket —
+``BGEPredictor.num_traces`` exposes the compile count, and
+``num_dispatches`` the dispatch count, for the recompile-storm guard in
+``benchmarks/scheduler_overhead.py``.
 """
 from __future__ import annotations
 
@@ -29,7 +35,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.job import Job
-from repro.data.dataset import WINDOW, StepSample, pad_batch
+from repro.data.dataset import (
+    WINDOW,
+    StepSample,
+    batch_bucket,
+    pad_batch,
+    seq_bucket,
+)
 from repro.data.tokenizer import CLS_ID, SEP_ID
 from repro.models import encoder as E
 from repro.models.layers import dense_init
@@ -144,10 +156,24 @@ class BGEPredictor:
             "head": init_head(k2, 2 * cfg.encoder.d_model, cfg.fc_hidden,
                               cfg.n_fc_layers),
         }
+        self._n_traces = 0
+        self.num_dispatches = 0
         self._apply = jax.jit(self._apply_fn)
+
+    @property
+    def num_traces(self) -> int:
+        """XLA traces of the *current* jitted apply — the compile-count
+        introspection hook.  Incremented by the Python side effect in
+        ``_apply_fn`` (which runs only while JAX traces a new input shape)
+        and reset whenever ``fit`` re-jits the apply, so for a predictor
+        doing serving-path inference it stays <= the number of shape
+        buckets no matter how the scheduling pool grows.  ``evaluate``
+        drives its own (unbucketed) chunk shapes and adds their traces."""
+        return self._n_traces
 
     # -------------------------------------------------------------- #
     def _apply_fn(self, params, tokens, mask):
+        self._n_traces += 1  # Python side effect: runs once per trace
         cls, mean = E.encode(params["encoder"], self.cfg.encoder, tokens, mask)
         feats = jnp.concatenate([cls, mean], axis=-1)
         raw = apply_head(params["head"], feats)
@@ -157,15 +183,29 @@ class BGEPredictor:
         return jnp.maximum(raw, 1.0)
 
     def predict_tokens(self, token_lists: Sequence[Sequence[int]]) -> np.ndarray:
+        """One batched inference dispatch, shape-bucketed.
+
+        The batch dimension is padded to the next power of two and the
+        sequence dimension to the ``seq_bucket`` ladder (capped at
+        ``max_len``), so the jitted apply compiles once per (batch, seq)
+        bucket instead of once per raw pool shape.  Padding rows are fully
+        masked (the encoder's masked attention/pooling make them inert) and
+        sliced off before returning."""
         ml = self.cfg.max_len
         b = len(token_lists)
-        toks = np.zeros((b, ml), np.int32)
-        mask = np.zeros((b, ml), bool)
+        if b == 0:
+            return np.zeros((0,))
+        self.num_dispatches += 1
+        longest = max(min(len(t), ml) for t in token_lists)
+        bb = batch_bucket(b)
+        sl = seq_bucket(longest, ml)
+        toks = np.zeros((bb, sl), np.int32)
+        mask = np.zeros((bb, sl), bool)
         for i, t in enumerate(token_lists):
-            t = list(t)[:ml]
+            t = list(t)[:sl]
             toks[i, : len(t)] = t
             mask[i, : len(t)] = True
-        return np.asarray(self._apply(self.params, toks, mask))
+        return np.asarray(self._apply(self.params, toks, mask))[:b]
 
     # -------------------------------------------------------------- #
     def _job_input(self, job: Job) -> List[int]:
@@ -221,6 +261,9 @@ class BGEPredictor:
             log_fn=log_fn,
         )
         self._apply = jax.jit(self._apply_fn)
+        # fresh jit cache -> fresh compile count (training traced
+        # _apply_fn under its own jit; those compiles are gone now)
+        self._n_traces = 0
         return history
 
     # -------------------------------------------------------------- #

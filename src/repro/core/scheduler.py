@@ -5,14 +5,26 @@ A policy assigns each job a *priority* — smaller runs earlier.  ISRTF
 re-predicts the remaining length every scheduling iteration (Algorithm 1
 lines 11–14): ``Predictor.init`` on first sight, ``Predictor.iter`` after.
 
-Anti-starvation: an aging term subtracts ``aging_rate * wait_seconds`` from
-the effective priority so long-waiting jobs eventually run regardless of
-length (paper §3.4: "policies that ... prevent starvation").
+This module owns the whole scoring pipeline:
+
+* :func:`score_pool` — ONE fused scoring pass per scheduling window over
+  ``running + waiting`` (a single batched predictor dispatch when the
+  predictor supports :meth:`~repro.core.predictor.BGEPredictor.predict_jobs`),
+  split back into per-queue effective priorities by the caller;
+* :func:`effective_priority` — the single source of truth for
+  priority-class banding and anti-starvation aging (an aging term subtracts
+  ``aging_rate * wait_seconds`` so long-waiting jobs eventually run
+  regardless of length — paper §3.4);
+* ``SchedulerConfig.repredict_every`` — ALISE-style prediction staleness:
+  between full re-scores a job reuses its cached prediction minus the
+  tokens it generated since it was last scored, so the encoder runs on a
+  configurable cadence instead of every window.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -31,12 +43,22 @@ class SchedulerConfig:
     aging_rate: float = 0.0
     #: MLFQ quantum boundaries in generated tokens
     mlfq_levels: Tuple[int, ...] = (50, 200, 800)
+    #: run the length predictor every N scheduling windows (per node); in
+    #: between, a job's cached prediction is decayed by the tokens it has
+    #: generated since it was scored (ALISE-style staleness).  1 = the
+    #: paper's Algorithm 1 (re-predict every window).  Only policies that
+    #: re-predict (ISRTF) are affected; newly arrived jobs are always
+    #: scored on first sight regardless of the stride.
+    repredict_every: int = 1
 
 
 class Policy:
     """Base: FCFS."""
 
     name = "fcfs"
+    #: True when the policy calls the predictor anew every window (ISRTF);
+    #: such policies may reuse stale predictions between full re-scores
+    repredicts = False
 
     def __init__(self, cfg: SchedulerConfig, predictor: Optional[Predictor]):
         self.cfg = cfg
@@ -44,14 +66,6 @@ class Policy:
 
     def priority(self, job: Job, now: float) -> float:
         return job.arrival_time
-
-    def effective(self, job: Job, now: float) -> float:
-        p = self.priority(job, now)
-        job.priority = p
-        job.predictions.append(p)
-        if self.cfg.aging_rate > 0 and job.last_enqueue_time is not None:
-            p -= self.cfg.aging_rate * max(now - job.last_enqueue_time, 0.0)
-        return p
 
 
 class FCFSPolicy(Policy):
@@ -77,6 +91,7 @@ class ISRTFPolicy(Policy):
     """Iterative shortest-remaining-time-first (the paper's scheduler)."""
 
     name = "isrtf"
+    repredicts = True
 
     def priority(self, job: Job, now: float) -> float:
         if job.priority is None:
@@ -114,6 +129,99 @@ def make_policy(cfg: SchedulerConfig, predictor: Optional[Predictor]) -> Policy:
     if cls in (SJFPolicy, ISRTFPolicy) and predictor is None:
         raise ValueError(f"{cfg.policy} requires a predictor")
     return cls(cfg, predictor)
+
+
+# --------------------------------------------------------------------------- #
+# Scoring pipeline (Algorithm 1 lines 11–14, fused + strided)
+# --------------------------------------------------------------------------- #
+
+
+#: effective-priority penalty per priority class — large enough that class
+#: bands never interleave for any realistic predicted length (tokens)
+PRIORITY_CLASS_WEIGHT = 1e7
+
+
+def effective_priority(cfg: SchedulerConfig, job: Job, raw: float,
+                       now: float) -> float:
+    """Raw priority -> effective priority: priority-class banding plus the
+    anti-starvation aging credit.  The single implementation — both the
+    frontend's batch path and any per-job caller go through here."""
+    eff = raw + job.priority_class * PRIORITY_CLASS_WEIGHT
+    if cfg.aging_rate > 0 and job.last_enqueue_time is not None:
+        eff -= cfg.aging_rate * max(now - job.last_enqueue_time, 0.0)
+    return eff
+
+
+def score_jobs(policy: Policy, jobs: Sequence[Job], now: float) -> List[float]:
+    """Fresh raw priorities for ``jobs`` — at most ONE predictor dispatch
+    (batched through ``predict_jobs`` when the predictor supports it).
+    Records each score on the job: ``priority``, the ``predictions``
+    history (one entry per scored window), and the staleness watermark
+    ``tokens_at_last_score``."""
+    if not jobs:
+        return []
+    pred = policy.predictor
+    if (policy.repredicts and pred is not None
+            and hasattr(pred, "predict_jobs")):
+        raw = [float(r) for r in pred.predict_jobs(jobs)]
+    else:
+        raw = [policy.priority(j, now) for j in jobs]
+    for j, p in zip(jobs, raw):
+        j.priority = p
+        j.predictions.append(p)
+        j.tokens_at_last_score = j.tokens_generated
+    return raw
+
+
+def cached_raw_priority(job: Job) -> float:
+    """The raw priority the current window's scoring pass used for ``job``:
+    its cached prediction decayed by the tokens generated since it was last
+    scored.  Right after a fresh score the decay is zero, so this is exact
+    on full re-score windows and matches the stale-window reuse otherwise."""
+    if job.tokens_at_last_score is None:
+        return float(job.priority)
+    return max(float(job.priority)
+               - (job.tokens_generated - job.tokens_at_last_score), 0.0)
+
+
+def batch_effective(policy: Policy, jobs: Sequence[Job],
+                    now: float) -> List[float]:
+    """Score ``jobs`` fresh and return effective priorities (one fused
+    predictor dispatch; see :func:`score_jobs`)."""
+    raw = score_jobs(policy, jobs, now)
+    return [effective_priority(policy.cfg, j, p, now)
+            for j, p in zip(jobs, raw)]
+
+
+def score_pool(policy: Policy, running: Sequence[Job], waiting: Sequence[Job],
+               now: float, *, full: bool = True
+               ) -> Tuple[List[float], List[float]]:
+    """One fused scoring pass over a node's whole pool.
+
+    Scores ``running + waiting`` in a single :func:`score_jobs` call — one
+    predictor dispatch per scheduling window instead of two — and splits the
+    effective priorities back into ``(run_eff, wait_eff)``.
+
+    With ``full=False`` (a stride window between full re-scores, see
+    ``SchedulerConfig.repredict_every``) a re-predicting policy reuses each
+    job's cached prediction decayed by the tokens generated since it was
+    scored; jobs that were never scored (new arrivals) still get a fresh,
+    batched prediction.  Non-repredicting policies always score fresh —
+    their ``priority`` is O(1) and must track arrival order / service level.
+    """
+    pool = list(running) + list(waiting)
+    if full or not policy.repredicts:
+        raw = score_jobs(policy, pool, now)
+    else:
+        fresh = [j for j in pool
+                 if j.priority is None or j.tokens_at_last_score is None]
+        fresh_raw = {id(j): p
+                     for j, p in zip(fresh, score_jobs(policy, fresh, now))}
+        raw = [fresh_raw[id(j)] if id(j) in fresh_raw
+               else cached_raw_priority(j) for j in pool]
+    eff = [effective_priority(policy.cfg, j, p, now)
+           for j, p in zip(pool, raw)]
+    return eff[: len(running)], eff[len(running):]
 
 
 # --------------------------------------------------------------------------- #
@@ -172,7 +280,11 @@ def select_preemptions(
     with our margin/frequency knobs)."""
     if not cfg.enabled or not running or not waiting:
         return []
-    budget = max(int(len(running) * cfg.max_fraction), 0)
+    # ceiling, not floor: int() would zero the budget for any running batch
+    # of <= 1/max_fraction jobs, silently disabling preemption at small
+    # batch sizes (e.g. <= 3 running at the default 0.25); an enabled
+    # policy with a positive fraction can always displace one victim
+    budget = math.ceil(len(running) * cfg.max_fraction)
     victims = sorted(running, key=lambda t: -t[0])  # worst running first
     claimants = sorted(waiting, key=lambda t: t[0])  # best waiting first
     swaps: List[Tuple[Job, Job]] = []

@@ -9,11 +9,14 @@ from repro.data.arrivals import (
 )
 from repro.data.dataset import (
     WINDOW,
+    batch_bucket,
     batch_iterator,
     build_step_samples,
     iqr_filter,
     make_predictor_dataset,
+    n_shape_buckets,
     pad_batch,
+    seq_bucket,
     split_622,
 )
 from repro.data.tokenizer import HashTokenizer
@@ -28,6 +31,7 @@ __all__ = [
     "Request",
     "WINDOW",
     "WorkloadGenerator",
+    "batch_bucket",
     "batch_iterator",
     "build_step_samples",
     "exponential_loglik",
@@ -35,7 +39,9 @@ __all__ = [
     "gamma_loglik",
     "iqr_filter",
     "make_predictor_dataset",
+    "n_shape_buckets",
     "pad_batch",
+    "seq_bucket",
     "similarity_probe_sets",
     "split_622",
 ]

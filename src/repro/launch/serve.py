@@ -96,6 +96,9 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--repredict-every", type=int, default=1,
+                    help="full predictor re-score every N windows (between "
+                         "them cached predictions decay by progress)")
     ap.add_argument("--max-output", type=int, default=32)
     ap.add_argument("--trace", default=None)
     ap.add_argument("--n", type=int, default=8)
@@ -120,7 +123,8 @@ def main() -> None:
         FrontendConfig(
             n_nodes=args.workers,
             scheduler=SchedulerConfig(policy=args.policy, window=args.window,
-                                      batch_size=args.slots),
+                                      batch_size=args.slots,
+                                      repredict_every=args.repredict_every),
             preemption=PreemptionConfig(enabled=not args.no_preemption),
         ),
         predictor,

@@ -54,6 +54,9 @@ class ExperimentConfig:
     rate_override: Optional[float] = None
     #: hardware speed multiplier (Fig 7 uses H100s: see profiles.H100_SPEEDUP)
     hw_speedup: float = 1.0
+    #: full predictor re-score every N scheduling windows (ALISE-style
+    #: staleness; 1 = the paper's every-window Algorithm 1)
+    repredict_every: int = 1
 
 
 def make_predictor(kind: str, seed: int = 0, bge=None):
@@ -94,7 +97,7 @@ def run_experiment(cfg: ExperimentConfig, *, bge=None,
         n_nodes=cfg.n_nodes,
         scheduler=SchedulerConfig(
             policy=cfg.policy, window=cfg.window, batch_size=cfg.batch_size,
-            aging_rate=cfg.aging_rate,
+            aging_rate=cfg.aging_rate, repredict_every=cfg.repredict_every,
         ),
         preemption=cfg.preemption,
     )

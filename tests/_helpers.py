@@ -1,0 +1,16 @@
+"""Shared test doubles for the scheduling test suites."""
+import numpy as np
+
+from repro.core import OraclePredictor
+
+
+class CountingOracle(OraclePredictor):
+    """Oracle with a batched entry point, counting dispatches like the BGE
+    predictor's ``predict_jobs`` path."""
+
+    def __init__(self):
+        self.dispatches = 0
+
+    def predict_jobs(self, jobs):
+        self.dispatches += 1
+        return np.array([float(j.true_remaining) for j in jobs])

@@ -244,6 +244,26 @@ def test_deadline_expiry_while_queued():
     assert h.result().n_tokens == 0
 
 
+def test_deadline_inside_final_window_expires_not_finishes():
+    """Regression: a job whose deadline fell inside its last executing
+    window used to FINISH with finish_time > deadline (results were applied
+    before the pending deadline event fired).  Expiry is now enforced at
+    the window boundary: the straddling window's tokens are dropped and the
+    job surfaces as EXPIRED at the deadline."""
+    server, backend = make_server(batch=1)
+    # 1 s per 50-token window: 100 tokens finish at t=2.0; deadline 1.5
+    # falls inside the second window
+    h = server.submit(req(0, 100, deadline=1.5))
+    server.drain()
+    r = h.result()
+    assert r.status is RequestStatus.EXPIRED and not r.ok
+    assert r.finish_time == pytest.approx(1.5)
+    assert r.n_tokens == 50              # second window's tokens dropped
+    assert 0 in backend.evictions
+    assert backend.resident.get(0, set()) == set()
+    assert all(j.job_id != 0 for j in server.frontend.finished)
+
+
 def test_deadline_after_finish_is_harmless():
     server, _ = make_server()
     h = server.submit(req(0, 40, deadline=100.0))

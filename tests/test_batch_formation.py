@@ -1,0 +1,203 @@
+"""Property tests for batch-formation invariants (hypothesis, shim-safe).
+
+The fused scoring pass (``repro.core.scheduler.score_pool``) rewired how
+``ELISFrontend._form_batch`` ranks the pool; these properties pin down what
+must survive any such refactor:
+
+* no job is simultaneously in ``waiting`` and ``running``;
+* an executed batch never exceeds ``min(batch_size, backend free slots)``
+  and never contains duplicates;
+* the fused single-pass effective priorities are identical to the old
+  two-pass (running, then waiting) values at ``repredict_every=1``;
+* exactly one predictor dispatch per scheduling window for a batched
+  predictor at ``repredict_every=1``.
+"""
+from typing import Sequence
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ELISFrontend,
+    ExecResult,
+    FrontendConfig,
+    Job,
+    OraclePredictor,
+    PreemptionConfig,
+    SchedulerConfig,
+    make_policy,
+)
+from repro.core.frontend import Backend
+from repro.core.scheduler import batch_effective, score_pool
+
+from _helpers import CountingOracle
+
+
+class SlottedBackend(Backend):
+    """1 s per window, token id 7; tracks residency to enforce slot caps."""
+
+    def __init__(self, slots: int):
+        self.slots = slots
+        self.resident = {}
+        self.calls = []
+
+    def execute(self, node, jobs: Sequence[Job], window, now) -> ExecResult:
+        res = self.resident.setdefault(node, set())
+        self.calls.append((node, [j.job_id for j in jobs],
+                           self.slots - len(res)))
+        toks, fin = [], []
+        for j in jobs:
+            res.add(j.job_id)
+            n = min(window, j.true_output_len - j.tokens_generated)
+            toks.append([7] * n)
+            fin.append(j.tokens_generated + n >= j.true_output_len)
+        return ExecResult(1.0, toks, fin)
+
+    def evict(self, node, job):
+        self.resident.setdefault(node, set()).discard(job.job_id)
+
+    def capacity(self, node):
+        return self.slots
+
+    def free_capacity(self, node):
+        return self.slots - len(self.resident.get(node, ()))
+
+
+def mk_job(i, length, arrival=0.0, klass=0):
+    return Job(job_id=i, prompt=f"p{i}", prompt_tokens=[1, 2],
+               arrival_time=arrival, true_output_len=length,
+               priority_class=klass)
+
+
+@given(
+    lens=st.lists(st.integers(1, 300), min_size=1, max_size=10),
+    arrivals=st.lists(st.floats(0.0, 20.0), min_size=1, max_size=10),
+    batch=st.integers(1, 5),
+    slots=st.integers(1, 6),
+    policy=st.sampled_from(["fcfs", "sjf", "isrtf"]),
+    preempt=st.booleans(),
+    stride=st.integers(1, 4),
+)
+@settings(max_examples=40, deadline=None)
+def test_batch_formation_invariants(lens, arrivals, batch, slots, policy,
+                                    preempt, stride):
+    backend = SlottedBackend(slots)
+    fe = ELISFrontend(
+        FrontendConfig(
+            n_nodes=1,
+            scheduler=SchedulerConfig(policy=policy, window=50,
+                                      batch_size=batch,
+                                      repredict_every=stride),
+            preemption=PreemptionConfig(enabled=preempt, margin=10,
+                                        max_fraction=0.5),
+        ),
+        OraclePredictor() if policy in ("sjf", "isrtf") else None,
+        backend,
+    )
+    for i, l in enumerate(lens):
+        fe.submit(mk_job(i, l, arrival=arrivals[i % len(arrivals)]))
+    while fe.pending():
+        fe.step()
+        for node in fe.running:
+            run_ids = {j.job_id for j in fe.running[node]}
+            wait_ids = {j.job_id for j in fe.waiting[node]}
+            assert not (run_ids & wait_ids), \
+                "job simultaneously waiting and running"
+    for _, ids, _free_before in backend.calls:
+        assert len(ids) <= min(batch, slots)
+        assert len(set(ids)) == len(ids), "duplicate job in a batch"
+    assert len(fe.finished) == len(lens)
+    for j in fe.finished:
+        assert j.tokens_generated == j.true_output_len
+
+
+@given(
+    run_lens=st.lists(st.integers(1, 500), min_size=0, max_size=6),
+    wait_lens=st.lists(st.integers(1, 500), min_size=0, max_size=6),
+    classes=st.lists(st.integers(0, 2), min_size=12, max_size=12),
+    aging=st.sampled_from([0.0, 2.5]),
+    now=st.floats(1.0, 50.0),
+)
+@settings(max_examples=60, deadline=None)
+def test_fused_pass_matches_two_pass_reference(run_lens, wait_lens, classes,
+                                               aging, now):
+    """score_pool(full=True) == the pre-fusion two-pass scoring (a
+    batch_effective call on running, then one on waiting)."""
+    cfg = SchedulerConfig(policy="isrtf", aging_rate=aging)
+    pol = make_policy(cfg, OraclePredictor())
+
+    def build():
+        jobs = [mk_job(i, l, klass=classes[i % len(classes)])
+                for i, l in enumerate(run_lens + wait_lens)]
+        for j in jobs:
+            j.generated = [7] * (j.true_output_len // 3)
+            j.record_enqueue(float(j.job_id % 7))
+        return jobs[: len(run_lens)], jobs[len(run_lens):]
+
+    r_ref, w_ref = build()
+    ref = (batch_effective(pol, r_ref, now), batch_effective(pol, w_ref, now))
+    r_got, w_got = build()
+    got = score_pool(pol, r_got, w_got, now, full=True)
+    assert got[0] == pytest.approx(ref[0])
+    assert got[1] == pytest.approx(ref[1])
+    # identical bookkeeping on the jobs themselves
+    for a, b in zip(r_ref + w_ref, r_got + w_got):
+        assert a.priority == b.priority
+        assert a.predictions == b.predictions
+        assert a.tokens_at_last_score == b.tokens_at_last_score
+
+
+@given(
+    lens=st.lists(st.integers(1, 250), min_size=1, max_size=8),
+    batch=st.integers(1, 4),
+)
+@settings(max_examples=25, deadline=None)
+def test_exactly_one_dispatch_per_window(lens, batch):
+    """At repredict_every=1, a batched predictor is dispatched exactly once
+    per executed scheduling window (the fused running+waiting pass)."""
+    pred = CountingOracle()
+    backend = SlottedBackend(slots=8)
+    fe = ELISFrontend(
+        FrontendConfig(
+            n_nodes=1,
+            scheduler=SchedulerConfig(policy="isrtf", window=50,
+                                      batch_size=batch, repredict_every=1),
+            preemption=PreemptionConfig(enabled=True, margin=10,
+                                        max_fraction=0.5),
+        ),
+        pred, backend,
+    )
+    for i, l in enumerate(lens):
+        fe.submit(mk_job(i, l, arrival=0.1 * i))
+    fe.run()
+    assert pred.dispatches == len(backend.calls)
+    assert len(fe.finished) == len(lens)
+
+
+def test_stride_cuts_dispatches_and_still_finishes():
+    """repredict_every=k runs the predictor ~1/k as often on a static pool
+    and every job still completes with its exact length."""
+    counts = {}
+    for stride in (1, 4):
+        pred = CountingOracle()
+        backend = SlottedBackend(slots=4)
+        fe = ELISFrontend(
+            FrontendConfig(
+                n_nodes=1,
+                scheduler=SchedulerConfig(policy="isrtf", window=50,
+                                          batch_size=4,
+                                          repredict_every=stride),
+                preemption=PreemptionConfig(enabled=False),
+            ),
+            pred, backend,
+        )
+        for i in range(4):
+            fe.submit(mk_job(i, 400))
+        done = fe.run()
+        assert len(done) == 4
+        assert all(j.tokens_generated == 400 for j in done)
+        counts[stride] = pred.dispatches
+    assert counts[4] < counts[1]
+    # 8 windows per job stream at stride 4 -> full scores at windows 0,4,8..
+    assert counts[4] <= counts[1] // 2

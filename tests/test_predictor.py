@@ -61,6 +61,44 @@ def test_frozen_encoder_mode(tiny_cfg):
                                   np.asarray(enc_after))
 
 
+def test_bucketed_traces_bounded_and_dispatch_counted(tiny_cfg):
+    """Growing the pool one job at a time must NOT retrace per pool size:
+    batch shapes are bucketed to powers of two, so 1..8 jobs compile at
+    most 4 batch buckets (x1 sequence bucket here)."""
+    p = BGEPredictor(tiny_cfg)
+    base = p.num_traces
+    for b in range(1, 9):
+        out = p.predict_tokens([[1, 2, 3]] * b)
+        assert out.shape == (b,)             # padding rows sliced off
+    assert p.num_dispatches == 8
+    assert p.num_traces - base == 4          # buckets {1, 2, 4, 8}
+    # repeating any pool size hits the jit cache — no new traces
+    p.predict_tokens([[1, 2, 3]] * 5)
+    assert p.num_traces - base == 4
+
+
+def test_seq_bucket_ladder_controls_retraces(tiny_cfg):
+    p = BGEPredictor(tiny_cfg)
+    base = p.num_traces
+    p.predict_tokens([[1] * 5])              # seq bucket 32
+    p.predict_tokens([[1] * 30])             # still 32
+    assert p.num_traces - base == 1
+    p.predict_tokens([[1] * 40])             # seq bucket 64
+    assert p.num_traces - base == 2
+    p.predict_tokens([[1] * 999])            # clipped to max_len bucket (128)
+    assert p.num_traces - base == 3
+
+
+def test_bucketed_padding_is_inert(tiny_cfg):
+    """A row's prediction must not depend on the bucket it was computed in
+    (padding rows/columns are fully masked)."""
+    p = BGEPredictor(tiny_cfg)
+    rows = [[1, 2, 3], [4, 5, 6, 7, 8], [9] * 40]
+    batched = p.predict_tokens(rows)
+    singles = np.array([p.predict_tokens([r])[0] for r in rows])
+    np.testing.assert_allclose(batched, singles, rtol=1e-4)
+
+
 def test_iterative_input_includes_partial_output(tiny_cfg):
     p = BGEPredictor(tiny_cfg)
     j = Job(job_id=0, prompt="x", prompt_tokens=[10, 11], arrival_time=0.0)

@@ -1,5 +1,6 @@
 """Scheduler policy unit + property tests (hypothesis)."""
-import numpy as np
+import math
+
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
@@ -13,7 +14,9 @@ from repro.core import (
     make_policy,
     select_preemptions,
 )
-from repro.core.frontend import batch_effective
+from repro.core.scheduler import batch_effective, score_pool
+
+from _helpers import CountingOracle
 
 
 def mk_job(i, arrival=0.0, true_len=100, generated=0):
@@ -99,8 +102,11 @@ def test_preemption_properties(run, wait, margin, frac):
     waiting = [(p, mk_job(200 + i)) for i, p in enumerate(wait)]
     cfg = PreemptionConfig(enabled=True, margin=margin, max_fraction=frac)
     swaps = select_preemptions(running, waiting, cfg)
-    # budget respected
-    assert len(swaps) <= int(len(running) * frac)
+    # budget respected (ceiling: an enabled policy with frac > 0 may always
+    # displace at least one victim, even for tiny running batches)
+    assert len(swaps) <= math.ceil(len(running) * frac)
+    if frac == 0:
+        assert swaps == []
     # each swap strictly beats the victim by the margin
     run_pri = {j.job_id: p for p, j in running}
     wait_pri = {j.job_id: p for p, j in waiting}
@@ -116,6 +122,127 @@ def test_preemption_disabled():
     waiting = [(1.0, mk_job(1))]
     assert select_preemptions(running, waiting,
                               PreemptionConfig(enabled=False)) == []
+
+
+def test_preemption_budget_ceil_small_batches():
+    """Regression: int() floored the budget to 0 for <= 3 running jobs at
+    the default max_fraction=0.25, silently disabling preemption whenever
+    the default batch_size=4 had a free slot."""
+    cfg = PreemptionConfig(enabled=True, margin=50.0, max_fraction=0.25)
+    for n_running in (1, 2, 3):
+        running = [(1000.0 + i, mk_job(100 + i)) for i in range(n_running)]
+        waiting = [(1.0, mk_job(200))]
+        swaps = select_preemptions(running, waiting, cfg)
+        assert len(swaps) == 1, f"no preemption with {n_running} running"
+    # a zero fraction still means "never preempt"
+    assert select_preemptions([(1000.0, mk_job(0))], [(1.0, mk_job(1))],
+                              PreemptionConfig(enabled=True, margin=0.0,
+                                               max_fraction=0.0)) == []
+
+
+# --------------------------------------------------------------------------- #
+# Fused scoring pass + re-prediction stride
+# --------------------------------------------------------------------------- #
+
+
+def test_score_pool_single_dispatch_and_split():
+    pred = CountingOracle()
+    pol = make_policy(SchedulerConfig(policy="isrtf"), pred)
+    running = [mk_job(0, true_len=300, generated=100), mk_job(1, true_len=80)]
+    waiting = [mk_job(2, true_len=40), mk_job(3, true_len=500)]
+    run_eff, wait_eff = score_pool(pol, running, waiting, now=0.0)
+    assert pred.dispatches == 1
+    assert run_eff == [200.0, 80.0]
+    assert wait_eff == [40.0, 500.0]
+    # scores recorded on the jobs (history + staleness watermark)
+    for j in running + waiting:
+        assert j.predictions == [j.priority]
+        assert j.tokens_at_last_score == j.tokens_generated
+
+
+def test_score_pool_fused_matches_two_pass_reference():
+    """At repredict_every=1 the fused pass must reproduce the old two-pass
+    (running then waiting) effective priorities exactly."""
+    cfg = SchedulerConfig(policy="isrtf", aging_rate=2.0)
+    mk = lambda: ([mk_job(0, true_len=300, generated=50),
+                   mk_job(1, true_len=90)],
+                  [mk_job(2, true_len=40), mk_job(3, true_len=700)])
+
+    def prep(running, waiting):
+        for j, klass in zip(running + waiting, (0, 1, 0, 2)):
+            j.priority_class = klass
+            j.record_enqueue(float(j.job_id))
+        return running, waiting
+
+    r1, w1 = prep(*mk())
+    pol = make_policy(cfg, OraclePredictor())
+    ref_run = batch_effective(pol, r1, now=10.0)
+    ref_wait = batch_effective(pol, w1, now=10.0)
+
+    r2, w2 = prep(*mk())
+    got_run, got_wait = score_pool(pol, r2, w2, now=10.0)
+    assert got_run == ref_run
+    assert got_wait == ref_wait
+
+
+def test_stride_reuses_decayed_prediction():
+    pred = CountingOracle()
+    pol = make_policy(SchedulerConfig(policy="isrtf", repredict_every=4), pred)
+    j = mk_job(0, true_len=500)
+    [eff], _ = score_pool(pol, [j], [], now=0.0, full=True)
+    assert eff == 500.0 and pred.dispatches == 1
+    # stale window: prediction reused minus progress, no predictor call
+    j.generated = [7] * 50
+    [eff], _ = score_pool(pol, [j], [], now=1.0, full=False)
+    assert eff == 450.0 and pred.dispatches == 1
+    # prediction history only grows on full re-scores
+    assert j.predictions == [500.0]
+    # a never-scored arrival is still scored fresh on a stale window
+    new = mk_job(1, true_len=70)
+    _, [new_eff] = score_pool(pol, [j], [new], now=2.0, full=False)
+    assert new_eff == 70.0 and pred.dispatches == 2
+    assert new.predictions == [70.0]
+
+
+def test_stride_stale_priority_never_negative():
+    pred = CountingOracle()
+    pol = make_policy(SchedulerConfig(policy="isrtf", repredict_every=8), pred)
+    j = mk_job(0, true_len=10)
+    score_pool(pol, [j], [], now=0.0, full=True)
+    j.generated = [7] * 200          # progressed far past the estimate
+    [eff], _ = score_pool(pol, [j], [], now=1.0, full=False)
+    assert eff == 0.0
+
+
+def test_cached_raw_priority_consistent_with_stale_scoring():
+    """The preemption swap path re-bands a victim with cached_raw_priority;
+    it must equal what the same window's scoring pass produced (decayed on
+    stale windows, fresh right after a score) — never the undecayed cache."""
+    from repro.core.scheduler import cached_raw_priority
+
+    pred = CountingOracle()
+    pol = make_policy(SchedulerConfig(policy="isrtf", repredict_every=4), pred)
+    j = mk_job(0, true_len=500)
+    score_pool(pol, [j], [], now=0.0, full=True)
+    assert cached_raw_priority(j) == 500.0      # fresh: zero decay
+    j.generated = [7] * 50
+    [eff], _ = score_pool(pol, [j], [], now=1.0, full=False)
+    assert cached_raw_priority(j) == 450.0 == eff
+    # a job scored fresh on the stale window also agrees
+    k = mk_job(1, true_len=80)
+    _, [k_eff] = score_pool(pol, [j], [k], now=1.0, full=False)
+    assert cached_raw_priority(k) == 80.0 == k_eff
+
+
+def test_stride_does_not_decay_fcfs_priorities():
+    """Stale reuse only applies to re-predicting policies — FCFS priorities
+    are arrival times and must never be decayed by token progress."""
+    pol = make_policy(SchedulerConfig(policy="fcfs", repredict_every=4), None)
+    j = mk_job(0, arrival=123.0)
+    score_pool(pol, [j], [], now=0.0, full=True)
+    j.generated = [7] * 100
+    [eff], _ = score_pool(pol, [j], [], now=1.0, full=False)
+    assert eff == 123.0
 
 
 @given(st.lists(st.integers(1, 1000), min_size=2, max_size=30))
