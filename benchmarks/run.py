@@ -28,6 +28,7 @@ def main() -> None:
         fig6_batch_sizes,
         fig7_scalability,
         live_engine,
+        multi_node,
         roofline,
         scheduler_overhead,
         table2_predictor,
@@ -54,6 +55,10 @@ def main() -> None:
          + ";max_traces=" + str(max(r.get("num_traces", 0) for r in rows))),
         ("table5_jct", table5_jct.run,
          lambda rows: f"mean_isrtf_gain_pct={sum(r['isrtf_vs_fcfs_pct'] for r in rows)/len(rows):.1f}"),
+        ("multi_node", multi_node.run,
+         lambda rows: "hetero_fcfs_lpw_gain_pct=" + "/".join(
+             f"{100 * (1 - multi_node.cell(rows, cluster='hetero', ordering='fcfs', n_nodes=n, placement='least_predicted_work', rebalance=False)['jct_mean'] / multi_node.cell(rows, cluster='hetero', ordering='fcfs', n_nodes=n, placement='least_jobs', rebalance=False)['jct_mean']):.1f}"
+             for n in sorted({r["n_nodes"] for r in rows}))),
         ("fig6_batch_sizes", fig6_batch_sizes.run,
          lambda rows: f"max_gain_pct={max(r['improvement_pct'] for r in rows):.1f}"),
         ("fig7_scalability", fig7_scalability.run,

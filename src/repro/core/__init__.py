@@ -6,7 +6,13 @@ request lifecycle (``Request``/``RequestOptions``/``TokenChunk``/``Response``/
 importable for tests and benchmarks but are not part of the caller contract.
 """
 from repro.core.job import Job, JobState, TERMINAL_STATES
-from repro.core.load_balancer import GlobalState, LoadBalancer
+from repro.core.load_balancer import (
+    GlobalState,
+    LoadBalancer,
+    PLACEMENTS,
+    PlacementPolicy,
+    make_placement,
+)
 from repro.core.metrics import improvement, summarize
 from repro.core.predictor import (
     BGEPredictor,
@@ -38,6 +44,10 @@ from repro.core.api import (
     TokenChunk,
 )
 
+#: deprecated alias — the structural ``Executor`` Protocol duplicated the
+#: ``Backend`` ABC since PR 1; implement/annotate against ``Backend``
+Executor = Backend
+
 __all__ = [
     "BGEPredictor",
     "Backend",
@@ -45,6 +55,7 @@ __all__ = [
     "ElisServer",
     "Event",
     "ExecResult",
+    "Executor",
     "FrontendConfig",
     "GlobalState",
     "Job",
@@ -52,6 +63,8 @@ __all__ = [
     "LoadBalancer",
     "NoisyOraclePredictor",
     "OraclePredictor",
+    "PLACEMENTS",
+    "PlacementPolicy",
     "PredictorConfig",
     "PreemptionConfig",
     "PriorityBuffer",
@@ -64,6 +77,7 @@ __all__ = [
     "TERMINAL_STATES",
     "TokenChunk",
     "improvement",
+    "make_placement",
     "make_policy",
     "select_preemptions",
     "summarize",

@@ -143,6 +143,8 @@ class Response:
     n_preemptions: int
     n_iterations: int
     tenant: str = "default"
+    #: cross-node migrations while queued (cluster rebalancing)
+    n_migrations: int = 0
 
     @property
     def n_tokens(self) -> int:
@@ -170,6 +172,7 @@ class Response:
             n_preemptions=job.n_preemptions,
             n_iterations=job.n_iterations,
             tenant=job.tenant,
+            n_migrations=job.n_migrations,
         )
 
 

@@ -14,7 +14,18 @@ Semantics (faithful to the paper):
     priorities; ``SchedulerConfig.repredict_every`` stretches the encoder
     cadence — between full re-scores a job reuses its cached prediction
     decayed by the tokens generated since it was scored;
-  * per-node PriorityBuffer; greedy min-load balancing at arrival;
+  * per-node PriorityBuffer; pluggable placement at arrival
+    (``FrontendConfig.placement``): greedy min-job-count (``least_jobs``,
+    the paper's line 3), outstanding-predicted-tokens balancing
+    (``least_predicted_work``), or per-node drain-time estimation over the
+    calibrated latency profile (``least_eta``, which reads the now-live
+    ``GlobalState.busy_until`` horizon);
+  * optional cross-node rebalancing (``FrontendConfig.rebalance``): at each
+    ``node_free`` event an under-loaded node steals the best queued jobs
+    from the most-loaded node's waiting queue when the predicted-work
+    imbalance exceeds a threshold — queued-only migration, so nothing with
+    live KV state moves (a migrated PREEMPTED job abandons its old node's
+    KV and pays the usual recompute on dispatch);
   * slot *stickiness*: a running job keeps its batch slot until it finishes —
     unless the preemption policy displaces it (FCFS ⇒ non-preemptive ORCA
     behaviour; ISRTF ⇒ priority preemption at window boundaries with
@@ -39,11 +50,11 @@ import abc
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.api import TokenChunk
 from repro.core.job import TERMINAL_STATES, Job, JobState
-from repro.core.load_balancer import GlobalState, LoadBalancer
+from repro.core.load_balancer import GlobalState, LoadBalancer, make_placement
 from repro.core.predictor import Predictor
 from repro.core.scheduler import (
     PRIORITY_CLASS_WEIGHT,
@@ -59,7 +70,7 @@ from repro.core.scheduler import (
 )
 
 __all__ = [
-    "Backend", "ELISFrontend", "Event", "ExecResult", "Executor",
+    "Backend", "ELISFrontend", "Event", "ExecResult",
     "FrontendConfig",
     # re-exported for callers that historically imported these from here —
     # the implementations now live in repro.core.scheduler
@@ -102,21 +113,12 @@ class Backend(abc.ABC):
         return None
 
 
-class Executor(Protocol):
-    """Structural variant of :class:`Backend` (duck-typed test doubles)."""
-
-    def execute(self, node: int, jobs: Sequence[Job], window: int,
-                now: float) -> ExecResult: ...
-
-    def evict(self, node: int, job: Job) -> None: ...
-
-
 @dataclass(frozen=True)
 class Event:
     """One observable lifecycle transition, emitted by ``step``."""
 
     t: float
-    #: arrival | tokens | preempted | finished | cancelled | expired
+    #: arrival | tokens | preempted | migrated | finished | cancelled | expired
     kind: str
     job_id: int
     chunk: Optional[TokenChunk] = None
@@ -127,16 +129,44 @@ class FrontendConfig:
     n_nodes: int = 1
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
     preemption: PreemptionConfig = field(default_factory=PreemptionConfig)
+    #: placement policy at arrival: least_jobs | least_predicted_work |
+    #: least_eta (see repro.core.load_balancer)
+    placement: str = "least_jobs"
+    #: seconds per generated token per node, for ``least_eta`` on
+    #: heterogeneous clusters (None = uniform nodes)
+    node_token_cost: Optional[Dict[int, float]] = None
+    #: enable cross-node work-stealing of queued jobs at node_free events
+    rebalance: bool = False
+    #: predicted-work imbalance (tokens) that triggers stealing
+    rebalance_threshold: float = 200.0
+    #: cap on jobs stolen per node_free event
+    max_migrations_per_free: int = 4
 
 
 class ELISFrontend:
     def __init__(self, cfg: FrontendConfig, predictor: Optional[Predictor],
-                 executor: Executor):
+                 executor: Backend):
         self.cfg = cfg
         self.policy = make_policy(cfg.scheduler, predictor)
         self.executor = executor
         self.state = GlobalState(cfg.n_nodes)
-        self.balancer = LoadBalancer(self.state)
+        self.balancer = LoadBalancer(
+            self.state, make_placement(cfg.placement, cfg.node_token_cost))
+        #: rebalancing is meaningful only across nodes
+        self._rebalance_active = cfg.rebalance and cfg.n_nodes > 1
+        #: predicted-work accounting has a consumer
+        self._track_work = (self.balancer.placement.uses_work
+                            or self._rebalance_active)
+        if self._track_work and predictor is None:
+            # without length predictions, work-aware placement degrades to
+            # the count tie-break and the rebalancer never finds work to
+            # steal — fail loudly instead of silently measuring least_jobs
+            raise ValueError(
+                f"placement={cfg.placement!r}"
+                f"{' with rebalance' if self._rebalance_active else ''} "
+                f"requires a predictor (got None)")
+        #: cross-node migrations performed by the rebalancing pass
+        self.migrations = 0
         # per-node structures
         self.waiting: Dict[int, List[Job]] = {n: [] for n in range(cfg.n_nodes)}
         self.running: Dict[int, List[Job]] = {n: [] for n in range(cfg.n_nodes)}
@@ -267,7 +297,11 @@ class ELISFrontend:
         job.finish_time = t
         job.cancel_requested = False
         self.executor.evict(node, job)
-        self.state.finish_job(node)
+        # retract the live count AND the predicted-work contribution — a job
+        # cancelled/expired while still queued (never dispatched) must not
+        # leave phantom work behind (GlobalState totals return to zero once
+        # everything is terminal)
+        self.state.finish_job(node, job.job_id)
         self.terminated.append(job)
         out.append(Event(t, state.value, job.job_id))
 
@@ -281,7 +315,7 @@ class ELISFrontend:
             self.terminated.append(job)
             out.append(Event(now, job.state.value, job.job_id))
             return
-        node = self.balancer.assign(job)
+        node = self.balancer.assign(job, self._arrival_estimate(job), now)
         job.state = JobState.WAITING
         job.record_enqueue(now)
         self.waiting[node].append(job)
@@ -304,6 +338,78 @@ class ELISFrontend:
             # not yet arrived: expire at its arrival event
             job.cancel_requested = True
 
+    def _arrival_estimate(self, job: Job) -> float:
+        """Predicted response length at arrival, for placement/rebalancing.
+
+        Only spent when something consumes predicted work (a work-aware
+        placement policy or the rebalancer) AND a predictor is available —
+        ``least_jobs`` without rebalancing therefore never touches the
+        predictor at arrival, which keeps its traces bit-identical to the
+        pre-cluster-layer balancer (stochastic predictors draw RNG per
+        call, in call order).  The ordering policy need not consume
+        predictions itself: prediction-aware *placement* over FCFS nodes
+        (Qiu et al.'s proxy-model setting) is exactly ``policy=fcfs`` plus
+        a predictor here.
+        """
+        if not self._track_work:
+            return 0.0
+        pred = self.policy.predictor
+        if pred is None:
+            return 0.0
+        return max(float(pred.init(job)), 0.0)
+
+    def _rebalance(self, node: int, now: float, out: List[Event]) -> None:
+        """Work-stealing at a ``node_free`` event: while the most-loaded
+        node's predicted-work backlog exceeds ours by more than the
+        threshold, steal its best queued job (the one its ISRTF order would
+        run next).  Queued-only migration — RUNNING jobs never move, so no
+        live KV state crosses nodes; a stolen PREEMPTED job abandons its
+        old node's cache and pays the normal recompute at dispatch."""
+        cfg = self.cfg
+        work = self.state.predicted_work
+        for _ in range(cfg.max_migrations_per_free):
+            # consider sources most-loaded first: the max node may hold all
+            # its work in RUNNING jobs (nothing stealable), while a lesser
+            # but still over-threshold node has a queue to relieve
+            best = None
+            for src in sorted(work, key=lambda n: (-work[n], n)):
+                gap = work[src] - work[node]
+                if src == node or gap <= cfg.rebalance_threshold:
+                    break  # descending order: no further source qualifies
+                for job in self.waiting[src]:
+                    w = self.state.work_of(job.job_id)
+                    # moving must strictly shrink the gap (0 < w < gap)
+                    if 0.0 < w < gap and (best is None or w < best[0]):
+                        best = (w, job)
+                if best is not None:
+                    break
+            if best is None:
+                return
+            _, job = best
+            src = job.node
+            self.waiting[src].remove(job)
+            if job.state is JobState.PREEMPTED:
+                # its KV residue on the old node is dead weight — release it
+                self.executor.evict(src, job)
+            job.node = node
+            self.state.move_job(job.job_id, node)
+            self.waiting[node].append(job)
+            job.n_migrations += 1
+            self.migrations += 1
+            out.append(Event(now, "migrated", job.job_id))
+
+    def _wake_idle_nodes(self, node: int, now: float) -> None:
+        """Give idle peers a chance to steal from our leftover queue (their
+        own ``node_free`` streams stop once they drain).  Only peers whose
+        predicted-work gap to us clears the steal threshold are woken —
+        anything closer would scan the queues and do nothing."""
+        work = self.state.predicted_work
+        for m in self.node_busy:
+            if not self.node_busy[m] \
+                    and work[node] - work[m] > self.cfg.rebalance_threshold:
+                self._push_event(now, "node_free", m)
+                self.node_busy[m] = True
+
     def _sweep_cancelled(self, node: int, now: float,
                          out: List[Event]) -> None:
         """Honour cancel requests against running jobs (window boundary)."""
@@ -314,6 +420,8 @@ class ELISFrontend:
 
     def _on_node_free(self, node: int, now: float, out: List[Event]) -> None:
         self._sweep_cancelled(node, now, out)
+        if self._rebalance_active:
+            self._rebalance(node, now, out)
         batch = self._form_batch(node, now, out)
         if not batch:
             self.node_busy[node] = False
@@ -321,6 +429,8 @@ class ELISFrontend:
         res = self.executor.execute(node, batch,
                                     self.cfg.scheduler.window, now)
         end = now + res.duration
+        # the horizon this window runs to — least_eta placement reads it
+        self.state.note_busy(node, end)
         for job, toks, fin in zip(batch, res.tokens, res.finished):
             if job.deadline is not None and end > job.deadline:
                 # the window straddles the deadline: its tokens materialise
@@ -333,6 +443,14 @@ class ELISFrontend:
                                 out)
                 continue
             job.generated.extend(toks)
+            # progress-based decay of the job's predicted-work contribution
+            # (kept fresh between scoring refreshes; the next scoring pass
+            # overwrites it with the policy's own remaining-length estimate
+            # when the policy predicts lengths)
+            if toks and self.state.work_of(job.job_id) > 0:
+                self.state.set_work(
+                    job.job_id,
+                    max(self.state.work_of(job.job_id) - len(toks), 0.0))
             iteration = job.n_iterations
             job.n_iterations += 1
             if job.first_token_time is None and toks:
@@ -350,11 +468,13 @@ class ELISFrontend:
                 job.finish_time = end
                 self.finished.append(job)
                 self.running[node].remove(job)
-                self.state.finish_job(node)
+                self.state.finish_job(node, job.job_id)
                 self.executor.evict(node, job)
                 out.append(Event(end, "finished", job.job_id))
         self._push_event(end, "node_free", node)
         self.node_busy[node] = True
+        if self._rebalance_active and self.waiting[node]:
+            self._wake_idle_nodes(node, now)
 
     # ------------------------------------------------------------------ #
     def _form_batch(self, node: int, now: float,
@@ -377,6 +497,16 @@ class ELISFrontend:
                                        full=(widx % stride == 0))
         # step 2 reuses these (no second scoring pass)
         eff = {j.job_id: e for j, e in zip(waiting, wait_eff)}
+
+        # refresh the cluster layer's predicted-work view from the raw
+        # (un-banded, un-aged) remaining-length scores this window used —
+        # skipped entirely when nothing consumes predicted work (default
+        # least_jobs placement without rebalancing keeps PR 2's hot path)
+        if self._track_work and self.policy.predicts_length:
+            for j in running:
+                self.state.set_work(j.job_id, max(cached_raw_priority(j), 0.0))
+            for j in waiting:
+                self.state.set_work(j.job_id, max(cached_raw_priority(j), 0.0))
 
         # backend capacity snapshot BEFORE preemption: a swap is net-zero on
         # residency (victim evicted now, replacement occupies the slot at

@@ -78,6 +78,8 @@ class Job:
     queuing_delay: float = 0.0
     last_enqueue_time: Optional[float] = None
     n_preemptions: int = 0
+    #: times the rebalancer moved this job to another node while queued
+    n_migrations: int = 0
     n_iterations: int = 0
 
     @property

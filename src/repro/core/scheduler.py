@@ -59,6 +59,10 @@ class Policy:
     #: True when the policy calls the predictor anew every window (ISRTF);
     #: such policies may reuse stale predictions between full re-scores
     repredicts = False
+    #: True when ``priority`` is a predicted remaining *length* in tokens —
+    #: only then do priorities feed the cluster layer's predicted-work
+    #: accounting (FCFS/MLFQ priorities are timestamps/levels, not work)
+    predicts_length = False
 
     def __init__(self, cfg: SchedulerConfig, predictor: Optional[Predictor]):
         self.cfg = cfg
@@ -77,6 +81,7 @@ class SJFPolicy(Policy):
     (Qiu et al. / the paper's oracle baseline when given OraclePredictor)."""
 
     name = "sjf"
+    predicts_length = True
 
     def priority(self, job: Job, now: float) -> float:
         if job.priority is None:
@@ -92,6 +97,7 @@ class ISRTFPolicy(Policy):
 
     name = "isrtf"
     repredicts = True
+    predicts_length = True
 
     def priority(self, job: Job, now: float) -> float:
         if job.priority is None:

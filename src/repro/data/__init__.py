@@ -20,7 +20,12 @@ from repro.data.dataset import (
     split_622,
 )
 from repro.data.tokenizer import HashTokenizer
-from repro.data.workload import Request, WorkloadGenerator, similarity_probe_sets
+from repro.data.workload import (
+    Request,
+    WorkloadGenerator,
+    bursty_arrival_times,
+    similarity_probe_sets,
+)
 
 __all__ = [
     "FABRIX_ALPHA",
@@ -34,6 +39,7 @@ __all__ = [
     "batch_bucket",
     "batch_iterator",
     "build_step_samples",
+    "bursty_arrival_times",
     "exponential_loglik",
     "fit_gamma",
     "gamma_loglik",

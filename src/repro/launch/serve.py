@@ -24,6 +24,7 @@ from repro.core import (
     ElisServer,
     FrontendConfig,
     OraclePredictor,
+    PLACEMENTS,
     PredictorConfig,
     PreemptionConfig,
     Request,
@@ -94,6 +95,17 @@ def main() -> None:
     ap.add_argument("--predictor-ckpt", default=None,
                     help="restore a trained BGE predictor (train_predictor.py)")
     ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--placement", default="least_jobs",
+                    choices=sorted(PLACEMENTS),
+                    help="cluster placement policy consulted at arrival "
+                         "(prediction-aware modes need a length predictor; "
+                         "least_eta assumes uniform worker speed here — the "
+                         "simulator wires calibrated per-node token costs)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="steal queued jobs across workers when the "
+                         "predicted-work imbalance exceeds the threshold")
+    ap.add_argument("--rebalance-threshold", type=float, default=200.0,
+                    help="predicted-token imbalance that triggers stealing")
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--window", type=int, default=8)
     ap.add_argument("--repredict-every", type=int, default=1,
@@ -117,8 +129,16 @@ def main() -> None:
             eos_id=-1, respect_job_max=True))
         for n in range(args.workers)
     }
-    predictor = (None if args.policy in ("fcfs", "mlfq")
-                 else build_predictor(args))
+    # prediction-aware placement / rebalancing consume length predictions
+    # even when the ordering policy (fcfs/mlfq) does not; rebalancing is
+    # meaningful only across workers
+    if args.rebalance and args.workers < 2:
+        print("[serve] --rebalance ignored with a single worker",
+              file=sys.stderr)
+    needs_predictor = (args.policy in ("sjf", "isrtf")
+                       or args.placement != "least_jobs"
+                       or (args.rebalance and args.workers > 1))
+    predictor = build_predictor(args) if needs_predictor else None
     server = ElisServer(
         FrontendConfig(
             n_nodes=args.workers,
@@ -126,6 +146,9 @@ def main() -> None:
                                       batch_size=args.slots,
                                       repredict_every=args.repredict_every),
             preemption=PreemptionConfig(enabled=not args.no_preemption),
+            placement=args.placement,
+            rebalance=args.rebalance,
+            rebalance_threshold=args.rebalance_threshold,
         ),
         predictor,
         EngineExecutor(engines),
@@ -142,12 +165,15 @@ def main() -> None:
             "jct_s": round(r.jct(), 3),
             "queuing_delay_s": round(r.queuing_delay, 3),
             "preemptions": r.n_preemptions,
+            "migrations": r.n_migrations,
         }))
     finished = [r for r in responses if r.ok]
     m = summarize(finished)
     print(f"[serve] mean JCT {m['jct_mean']:.2f}s  queue "
           f"{m['queuing_delay_mean']:.2f}s  throughput "
           f"{m['throughput_rps']:.2f} req/s  "
+          f"placement={args.placement} "
+          f"migrations={server.frontend.migrations}  "
           f"({len(finished)}/{len(responses)} finished)", file=sys.stderr)
 
 

@@ -5,6 +5,14 @@ calibrated latency model.  Replays each job's pre-generated response token
 stream (the simulator never invents tokens — ground truth lives with the
 workload generator), tracks per-node KV residency for preemption/recompute
 accounting, and enforces the Appendix-A memory capacity.
+
+Clusters may be *heterogeneous*: ``node_profiles`` maps node ids to their
+own :class:`~repro.simulate.profiles.ModelProfile` (e.g. fast and slow pods
+mixing two calibrated entries); unmapped nodes fall back to ``profile``.
+Each node's latency AND its Appendix-A KV capacity come from its own
+profile, so placement policies are evaluated where nodes actually differ.
+A job that resumes on a *different* node after preemption or migration is
+simply not resident there — it pays the normal cold-start KV recompute.
 """
 from __future__ import annotations
 
@@ -21,16 +29,39 @@ class SimExecutor(Backend):
     profile: ModelProfile
     #: include the paper's measured 11.04 ms scheduling overhead per iteration
     sched_overhead_s: float = SCHED_OVERHEAD_MS / 1000.0
-    #: cap on resident KV tokens per node (None = Appendix-A capacity)
-    kv_capacity_tokens: int = None
+    #: global cap on resident KV tokens per node; None = each node's own
+    #: Appendix-A capacity (per-profile on heterogeneous clusters)
+    kv_capacity_tokens: Optional[int] = None
+    #: heterogeneous clusters: node id -> that pod's profile (latency and
+    #: KV capacity); nodes absent from the map run ``profile``
+    node_profiles: Optional[Dict[int, ModelProfile]] = None
 
     _resident: Dict[int, Set[int]] = field(default_factory=dict)
     _resident_tokens: Dict[int, Dict[int, int]] = field(default_factory=dict)
     mem_preemptions: int = 0
 
     def __post_init__(self):
-        if self.kv_capacity_tokens is None:
+        if self.kv_capacity_tokens is None and not self.node_profiles:
+            # homogeneous cluster: materialise the single capacity up front
+            # (kept for introspection; heterogeneous runs stay per-node)
             self.kv_capacity_tokens = self.profile.kv_capacity_tokens()
+
+    # ------------------------------------------------------------------ #
+    def profile_of(self, node: int) -> ModelProfile:
+        if self.node_profiles:
+            return self.node_profiles.get(node, self.profile)
+        return self.profile
+
+    def node_token_cost(self, n_nodes: int) -> Dict[int, float]:
+        """Seconds per generated token per node (batch-1 decode rate) — the
+        calibrated cost map the ``least_eta`` placement policy consumes."""
+        return {n: self.profile_of(n).decode_ms_1 / 1000.0
+                for n in range(n_nodes)}
+
+    def _capacity_of(self, node: int) -> int:
+        if self.kv_capacity_tokens is not None:
+            return self.kv_capacity_tokens
+        return self.profile_of(node).kv_capacity_tokens()
 
     # ------------------------------------------------------------------ #
     def evict(self, node: int, job: Job) -> None:
@@ -51,6 +82,7 @@ class SimExecutor(Backend):
     # ------------------------------------------------------------------ #
     def execute(self, node: int, jobs: Sequence[Job], window: int,
                 now: float) -> ExecResult:
+        prof = self.profile_of(node)
         res = self._resident.setdefault(node, set())
         res_toks = self._resident_tokens.setdefault(node, {})
         b = len(jobs)
@@ -58,10 +90,11 @@ class SimExecutor(Backend):
         prefill_ms = 0.0
         for job in jobs:
             if job.job_id not in res:
-                # cold start or resumed-after-preemption: recompute the KV
-                # cache for everything generated so far (vLLM recompute mode)
+                # cold start or resumed-after-preemption/migration: recompute
+                # the KV cache for everything generated so far (vLLM
+                # recompute mode)
                 n = len(job.prompt_tokens) + job.tokens_generated
-                prefill_ms += self.profile.prefill_ms(b, n)
+                prefill_ms += prof.prefill_ms(b, n)
                 res.add(job.job_id)
                 res_toks[job.job_id] = n
 
@@ -77,13 +110,14 @@ class SimExecutor(Backend):
             res_toks[job.job_id] = res_toks.get(job.job_id, 0) + n_new
             max_new = max(max_new, n_new)
 
-        decode_ms = max_new * self.profile.decode_ms(b)
+        decode_ms = max_new * prof.decode_ms(b)
         duration = self.sched_overhead_s + (prefill_ms + decode_ms) / 1000.0
 
         # Appendix-A memory pressure: if resident KV exceeds capacity, evict
         # the largest non-batch residents (counted as memory preemptions)
+        cap = self._capacity_of(node)
         total = sum(res_toks.values())
-        if total > self.kv_capacity_tokens:
+        if total > cap:
             batch_ids = {j.job_id for j in jobs}
             evictable = sorted(
                 ((t, jid) for jid, t in res_toks.items()
@@ -91,7 +125,7 @@ class SimExecutor(Backend):
                 reverse=True,
             )
             for t, jid in evictable:
-                if total <= self.kv_capacity_tokens:
+                if total <= cap:
                     break
                 res.discard(jid)
                 res_toks.pop(jid)

@@ -18,7 +18,7 @@ from repro.core import (
 )
 from repro.core import api
 from repro.data.arrivals import GammaArrivals
-from repro.data.workload import Request, WorkloadGenerator
+from repro.data.workload import Request, WorkloadGenerator, bursty_arrival_times
 from repro.simulate.executor import SimExecutor
 from repro.simulate.profiles import PROFILES, ModelProfile, avg_request_rate
 
@@ -57,6 +57,21 @@ class ExperimentConfig:
     #: full predictor re-score every N scheduling windows (ALISE-style
     #: staleness; 1 = the paper's every-window Algorithm 1)
     repredict_every: int = 1
+    #: cluster placement policy: least_jobs | least_predicted_work | least_eta
+    placement: str = "least_jobs"
+    #: cross-node work-stealing of queued jobs at node_free events
+    rebalance: bool = False
+    #: predicted-work imbalance (tokens) that triggers stealing
+    rebalance_threshold: float = 200.0
+    #: heterogeneous cluster: node id -> profile name (PROFILES key); nodes
+    #: absent from the map run ``model``'s profile.  hw_speedup applies to
+    #: every node.
+    node_profiles: Optional[Dict[int, str]] = None
+    #: arrival process: "gamma" (FabriX-calibrated) | "bursty" (flash
+    #: crowds, repro.data.workload.bursty_arrival_times)
+    arrivals: str = "gamma"
+    #: requests per flash crowd when ``arrivals="bursty"``
+    burst_size: int = 8
 
 
 def make_predictor(kind: str, seed: int = 0, bge=None):
@@ -87,10 +102,23 @@ def run_experiment(cfg: ExperimentConfig, *, bge=None,
     if rate is None:
         rate = avg_request_rate(profile, cfg.batch_size) * cfg.rps_multiple
         rate *= cfg.n_nodes
-    arrivals = GammaArrivals().rate_scaled(rate)
-    times = arrivals.sample_arrival_times(len(requests), rng)
+    if cfg.arrivals == "bursty":
+        times = bursty_arrival_times(len(requests), rate, rng,
+                                     burst_size=cfg.burst_size)
+    else:
+        times = GammaArrivals().rate_scaled(rate).sample_arrival_times(
+            len(requests), rng)
     for r, t in zip(requests, times):
         r.arrival_time = float(t)
+
+    node_profiles = None
+    if cfg.node_profiles:
+        node_profiles = {
+            int(n): (PROFILES[name].scaled(cfg.hw_speedup)
+                     if cfg.hw_speedup != 1.0 else PROFILES[name])
+            for n, name in cfg.node_profiles.items()
+        }
+    executor = SimExecutor(profile, node_profiles=node_profiles)
 
     predictor = make_predictor(cfg.predictor, seed=cfg.seed + 1, bge=bge)
     fe_cfg = FrontendConfig(
@@ -100,15 +128,22 @@ def run_experiment(cfg: ExperimentConfig, *, bge=None,
             aging_rate=cfg.aging_rate, repredict_every=cfg.repredict_every,
         ),
         preemption=cfg.preemption,
+        placement=cfg.placement,
+        node_token_cost=executor.node_token_cost(cfg.n_nodes),
+        rebalance=cfg.rebalance,
+        rebalance_threshold=cfg.rebalance_threshold,
     )
-    executor = SimExecutor(profile)
     server = ElisServer(fe_cfg, predictor, executor)
     for r in requests:
         server.submit(api.Request.from_workload(r))
     responses = server.drain()
+    # cluster-accounting invariant: every admitted job is terminal, so the
+    # load balancer's live-count and predicted-work totals are back to zero
+    server.frontend.state.assert_drained()
     done = [r for r in responses if r.ok]
     m = summarize(done)
     m["mem_preemptions"] = executor.mem_preemptions
+    m["migrations"] = server.frontend.migrations
     m["n_finished"] = len(done)
     m["n_unfinished"] = len(responses) - len(done)
     return m

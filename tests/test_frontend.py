@@ -1,17 +1,27 @@
 """ELIS frontend (Algorithm 1) against a scripted executor."""
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tarfile
 from typing import List, Sequence
 
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import (
     ELISFrontend,
     ExecResult,
     FrontendConfig,
     Job,
+    JobState,
     OraclePredictor,
     PreemptionConfig,
     SchedulerConfig,
 )
+from repro.core.load_balancer import GlobalState, LeastEtaPlacement
 
 
 class ScriptedExecutor:
@@ -123,3 +133,210 @@ def test_queuing_delay_accounting():
     assert delays[0] < delays[1] < delays[2]
     for j in done.values():
         assert j.queuing_delay <= j.jct() + 1e-9
+
+
+# --------------------------------------------------------------------------- #
+# Cluster scheduling: placement, rebalancing, accounting invariants
+# --------------------------------------------------------------------------- #
+
+
+def cluster_frontend(nodes, placement="least_jobs", rebalance=False,
+                     threshold=50.0, policy="isrtf", batch=2,
+                     node_token_cost=None):
+    return ELISFrontend(
+        FrontendConfig(
+            n_nodes=nodes,
+            scheduler=SchedulerConfig(policy=policy, window=50,
+                                      batch_size=batch),
+            preemption=PreemptionConfig(enabled=True, margin=10,
+                                        max_fraction=1.0),
+            placement=placement,
+            rebalance=rebalance,
+            rebalance_threshold=threshold,
+            node_token_cost=node_token_cost,
+        ),
+        OraclePredictor() if policy in ("sjf", "isrtf") else None,
+        ScriptedExecutor(),
+    )
+
+
+@given(
+    lens=st.lists(st.integers(1, 1000), min_size=1, max_size=30),
+    nodes=st.integers(2, 5),
+)
+@settings(max_examples=50, deadline=None)
+def test_least_predicted_work_imbalance_bound(lens, nodes):
+    """Greedy length-weighted placement with a perfect oracle: after every
+    batch of simultaneous arrivals, no node exceeds another's predicted
+    work by more than the largest single job."""
+    fe = cluster_frontend(nodes, placement="least_predicted_work")
+    for j in mk_jobs(lens):
+        fe.submit(j)
+    for _ in lens:  # arrivals sort before any node_free at equal t
+        fe.step()
+    work = fe.state.predicted_work
+    assert sum(fe.state.active_jobs.values()) == len(lens)
+    assert max(work.values()) - min(work.values()) <= max(lens) + 1e-9
+
+
+@given(
+    lens=st.lists(st.integers(1, 600), min_size=4, max_size=16),
+    nodes=st.integers(2, 3),
+    threshold=st.integers(20, 200),
+)
+@settings(max_examples=30, deadline=None)
+def test_migration_preserves_disjoint_job_sets(lens, nodes, threshold):
+    """Rebalancing never moves a RUNNING job and never leaves a job on two
+    nodes: after every step each live job appears in exactly one queue, on
+    the node its record claims."""
+    fe = cluster_frontend(nodes, placement="least_predicted_work",
+                          rebalance=True, threshold=float(threshold))
+    arrivals = [0.7 * (i % 5) for i in range(len(lens))]
+    for j in mk_jobs(lens, arrivals):
+        fe.submit(j)
+    was_running = set()
+    while fe.pending():
+        for ev in fe.step():
+            if ev.kind == "migrated":
+                # the rebalancer only reads waiting queues, so anything
+                # that entered this step RUNNING can never be migrated
+                # (it may be dispatched and finish AFTER the migration,
+                # within the same node_free step)
+                assert ev.job_id not in was_running, \
+                    f"running job {ev.job_id} was migrated"
+        was_running = {j.job_id for node in range(nodes)
+                       for j in fe.running[node]}
+        seen = {}
+        for node in range(nodes):
+            for j in fe.running[node] + fe.waiting[node]:
+                assert j.job_id not in seen, \
+                    f"job {j.job_id} on nodes {seen[j.job_id]} and {node}"
+                seen[j.job_id] = node
+                assert j.node == node
+    assert len(fe.finished) == len(lens)
+    for j in fe.finished:
+        assert j.tokens_generated == j.true_output_len
+    fe.state.assert_drained()
+
+
+def test_rebalancing_steals_from_overloaded_node():
+    """A node that drains early steals queued work from its swamped peer
+    (and the stolen jobs are the ones ISRTF would run next)."""
+    fe = cluster_frontend(2, placement="least_jobs", rebalance=True,
+                          threshold=100.0, batch=1)
+    # t=0: a long job to node 0, a tiny one to node 1; while both execute,
+    # three mediums arrive and least_jobs stacks two on node 0
+    lens = [1000, 10, 300, 300, 300]
+    arrivals = [0.0, 0.0, 1.5, 1.5, 1.5]
+    for j in mk_jobs(lens, arrivals):
+        fe.submit(j)
+    done = fe.run()
+    assert len(done) == 5
+    assert fe.migrations >= 1
+    assert sum(j.n_migrations for j in done) == fe.migrations
+    fe.state.assert_drained()
+
+
+def test_global_state_returns_to_zero_after_cancel_and_expiry():
+    """Satellite bugfix: a job cancelled or expired while still queued
+    (assigned but never dispatched) must retract its predicted-work
+    contribution, not just its job count."""
+    fe = cluster_frontend(2, placement="least_predicted_work", batch=1)
+    jobs = mk_jobs([400, 400, 200, 200, 150])
+    jobs[3].deadline = 0.5      # expires before it can ever run
+    for j in jobs:
+        fe.submit(j)
+    fe.run_until(0.1)
+    assert fe.cancel(4)         # still waiting: terminates immediately
+    done = fe.run()
+    states = {j.job_id: j.state for j in fe.terminated}
+    assert states[3] is JobState.EXPIRED
+    assert states[4] is JobState.CANCELLED
+    assert len(done) == 3
+    fe.state.assert_drained()
+    assert all(w == 0.0 for w in fe.state.predicted_work.values())
+
+
+def test_least_eta_prefers_fast_node():
+    """With per-node token costs, least_eta routes to the pod that will
+    finish the job sooner, not the one with fewer jobs."""
+    state = GlobalState(2)
+    placement = LeastEtaPlacement({0: 1.0, 1: 0.1})
+    job = mk_jobs([100])[0]
+    assert placement.select(state, job, estimate=100.0, now=0.0) == 1
+    # pile predicted work on the fast node until the slow one wins
+    state.add_job(1, job_id=99, work=2000.0)
+    assert placement.select(state, job, estimate=100.0, now=0.0) == 0
+
+
+def test_busy_until_is_live_and_monotone():
+    """Satellite bugfix: busy_until (dead since seed) now tracks each
+    window's horizon and is asserted monotone per node."""
+    fe = cluster_frontend(1, placement="least_eta", batch=2,
+                          node_token_cost={0: 0.01})
+    for j in mk_jobs([120, 80]):
+        fe.submit(j)
+    horizons = []
+    while fe.pending():
+        fe.step()
+        horizons.append(fe.state.busy_until[0])
+    assert horizons[-1] > 0.0
+    assert horizons == sorted(horizons)
+    with pytest.raises(AssertionError):
+        fe.state.note_busy(0, horizons[-1] - 1.0)
+
+
+# --------------------------------------------------------------------------- #
+# Trace identity: least_jobs reproduces the pre-cluster-layer balancer
+# --------------------------------------------------------------------------- #
+
+#: last commit before the cluster-scheduling layer (PR 2)
+PRE_PR_SHA = "726cdb4"
+
+PROBE = """
+import json
+from repro.simulate import ExperimentConfig, run_experiment
+cfg = ExperimentConfig(model="vic", policy="isrtf", predictor="noisy_oracle",
+                       n_requests=50, n_nodes=3, batch_size=4,
+                       rps_multiple=1.5, seed=0)
+print(json.dumps(run_experiment(cfg), sort_keys=True))
+"""
+
+
+def test_least_jobs_trace_identical_to_pre_pr(tmp_path):
+    """Default placement must reproduce the pre-PR greedy balancer
+    bit-identically (NoisyOraclePredictor draws RNG per prediction in
+    scoring order, so any divergence in placement, scoring order, or event
+    ordering shows up immediately in every aggregate)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if shutil.which("git") is None:
+        pytest.skip("git unavailable")
+    ar = subprocess.run(
+        ["git", "-C", repo, "archive", PRE_PR_SHA, "src"],
+        capture_output=True)
+    if ar.returncode != 0:
+        pytest.skip(f"pre-PR sha {PRE_PR_SHA} unavailable "
+                    f"(shallow checkout?): {ar.stderr.decode()[:200]}")
+    old = tmp_path / "old"
+    old.mkdir()
+    tar = tmp_path / "old.tar"
+    tar.write_bytes(ar.stdout)
+    with tarfile.open(tar) as tf:
+        tf.extractall(old)
+
+    env = dict(os.environ, PYTHONPATH=str(old / "src"),
+               JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", PROBE], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    old_metrics = json.loads(proc.stdout)
+
+    from repro.simulate import ExperimentConfig, run_experiment
+    cfg = ExperimentConfig(model="vic", policy="isrtf",
+                           predictor="noisy_oracle", n_requests=50,
+                           n_nodes=3, batch_size=4, rps_multiple=1.5, seed=0)
+    new_metrics = run_experiment(cfg)
+    # the old build predates the migration counter; every metric it knows
+    # about must match bit-for-bit
+    for k, v in old_metrics.items():
+        assert new_metrics[k] == v, (k, v, new_metrics[k])

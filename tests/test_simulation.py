@@ -73,6 +73,48 @@ def test_profiles_match_paper_table4():
     )
 
 
+def test_heterogeneous_executor_uses_per_node_profiles():
+    """A slow pod's window takes longer than a fast pod's for the same
+    batch, and per-node token costs feed the least_eta placement."""
+    from repro.core import Job
+    from repro.simulate import SimExecutor
+
+    fast, slow = PROFILES["vic"], PROFILES["lam13"]
+    ex = SimExecutor(slow, node_profiles={0: fast})
+
+    def mk():
+        return Job(job_id=0, prompt="p", prompt_tokens=[1],
+                   arrival_time=0.0, true_output_len=50,
+                   output_tokens=[7] * 50)
+
+    d_fast = ex.execute(0, [mk()], window=50, now=0.0).duration
+    d_slow = ex.execute(1, [mk()], window=50, now=0.0).duration
+    assert d_slow > d_fast
+    ratio = slow.decode_ms_1 / fast.decode_ms_1
+    assert d_slow / d_fast == pytest.approx(ratio, rel=0.2)
+
+    costs = ex.node_token_cost(2)
+    assert costs[0] == pytest.approx(fast.decode_ms_1 / 1000.0)
+    assert costs[1] == pytest.approx(slow.decode_ms_1 / 1000.0)
+    # per-node Appendix-A capacity follows each pod's own profile
+    assert ex._capacity_of(0) == fast.kv_capacity_tokens()
+    assert ex._capacity_of(1) == slow.kv_capacity_tokens()
+
+
+def test_cluster_experiment_with_placement_and_rebalancing():
+    """Full pipeline: heterogeneous cluster + least_eta + work-stealing
+    completes every request (run_experiment asserts the GlobalState
+    drained-to-zero invariant internally)."""
+    cfg = ExperimentConfig(model="vic", n_requests=60, rps_multiple=1.2,
+                           n_nodes=2, seed=4, predictor="oracle",
+                           placement="least_eta", rebalance=True,
+                           node_profiles={0: "vic", 1: "lam13"},
+                           arrivals="bursty", burst_size=12)
+    m = run_experiment(cfg)
+    assert m["n_finished"] == 60 and m["n_unfinished"] == 0
+    assert m["migrations"] >= 0
+
+
 def test_kv_capacity_model_appendix_a():
     """Appendix A: lam13 preempts at ~batch 120 with 90% memory limit.
     capacity_tokens / (batch * avg_total_tokens_per_req) ~ 1 at onset."""
