@@ -1,8 +1,35 @@
-"""Live-engine evaluation: ISRTF vs FCFS on the real JAX engine (reduced
-model, wall-clock timed) — validates that the mechanism's gains survive on
-a real continuous-batching execution engine, not only in simulation.
-Drives the engine through the online :class:`ElisServer` API."""
+"""Live-engine evaluation: the fast path, measured.
+
+Two studies on the real JAX engine (reduced model, wall-clock timed):
+
+1. **Fast-path grid** — tokens/sec and per-window latency for
+   ``attn_impl ∈ {xla, pallas}`` × ``mode ∈ {fast, serial}`` at several
+   occupancies, where ``fast`` = batched bucketed prefill + masked
+   (compacted) decode windows and ``serial`` = the pre-fast-path baseline
+   (batch-1 prefills, full ``max_slots`` decode every window).  Asserts the
+   fast path beats serial tokens/sec at ≥2 occupied slots and that the
+   pallas and xla decode paths emit identical greedy tokens.
+2. **Policy comparison + live↔sim calibration** — ISRTF vs FCFS driven
+   through the online :class:`ElisServer` API on an
+   :class:`EngineExecutor`; the measured window log is fitted back onto the
+   simulator's latency model (``EngineExecutor.calibrated_profile``) and
+   the fitted profile is replayed in a :class:`SimExecutor` to report the
+   live-vs-sim JCT gap.
+
+Emits ``BENCH_live_engine.json`` at the repo root (committed).  ``--smoke``
+runs the CI guard instead: one prefill compile per shape bucket, one decode
+dispatch per window at the compacted batch bucket, frozen slots untouched,
+pallas == xla numerics on a tiny config.
+
+    PYTHONPATH=src python -m benchmarks.live_engine [--smoke|--quick]
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
 
 import jax
 import numpy as np
@@ -11,6 +38,7 @@ from repro.configs import get_config
 from repro.core import (
     ElisServer,
     FrontendConfig,
+    Job,
     OraclePredictor,
     PreemptionConfig,
     Request,
@@ -23,6 +51,121 @@ from repro.models import init_params
 
 from benchmarks.common import save_results
 
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_live_engine.json")
+
+
+def _job(i: int, n_prompt: int) -> Job:
+    toks = [10 + (7 * i + k) % 50 for k in range(n_prompt)]
+    return Job(job_id=i, prompt=f"p{i}", prompt_tokens=toks, arrival_time=0.0)
+
+
+# --------------------------------------------------------------------------- #
+# Study 1: fast-path grid
+# --------------------------------------------------------------------------- #
+
+
+def _measure_variant(cfg, params, impl: str, fast: bool, occupancy: int,
+                     max_slots: int, window: int, n_windows: int) -> Dict:
+    """Steady-state tokens/sec + per-window latency for one grid cell.
+
+    The scenario is a *serve cycle* in the short-response churn regime —
+    the LMSYS mode where most responses finish within a window, and the
+    regime ELIS's iteration-level preemption creates on purpose
+    (evict + recompute-on-resume): every window re-admits ``occupancy``
+    jobs and decodes them to their cap.  Tokens/sec therefore prices
+    admission (where batched prefill collapses N dispatches into one) AND
+    decode (where masking compacts the dispatch to the occupied bucket).
+    Warmup cycles pay all XLA compiles before timing starts.
+    """
+    eng = InferenceEngine(cfg, params, EngineConfig(
+        max_slots=max_slots, max_len=128, max_output=window, eos_id=-1,
+        attn_impl=impl, batched_prefill=fast, masked_decode=fast,
+        respect_job_max=False))
+    next_id = [0]
+
+    def fresh_batch():
+        jobs = [_job(next_id[0] + i, 4 + ((next_id[0] + i) % 3))
+                for i in range(occupancy)]
+        next_id[0] += occupancy
+        return jobs
+
+    def cycle(jobs):
+        """One serve cycle: admit (batched or serial), decode to the cap,
+        evict the finished jobs (max_output == window ends each job in one
+        window — the churn that puts prefill on the hot path)."""
+        toks, fin = eng.run_window(jobs, window)
+        for job, t in zip(jobs, toks):
+            job.generated.extend(t)
+        for job, f in zip(jobs, fin):
+            if f or job.tokens_generated >= window:
+                eng.evict_job(job.job_id)
+        return toks
+
+    warm = cycle(fresh_batch())             # pays prefill+decode compile
+    sample_tokens = [t[:6] for t in warm[:2]]
+    lat: List[float] = []
+    tokens = 0
+    for _ in range(n_windows):
+        jobs = fresh_batch()
+        t0 = time.perf_counter()
+        toks = cycle(jobs)
+        lat.append(time.perf_counter() - t0)
+        tokens += sum(len(t) for t in toks)
+    total = sum(lat)
+    return {
+        "attn_impl": impl, "mode": "fast" if fast else "serial",
+        "occupancy": occupancy, "max_slots": max_slots, "window": window,
+        "tokens_per_s": round(tokens / total, 2),
+        "cycle_ms_median": round(float(np.median(lat)) * 1000, 2),
+        "prefill_dispatches": eng.num_prefill_dispatches,
+        "prefill_traces": eng.num_prefill_traces,
+        "decode_dispatches": eng.num_decode_dispatches,
+        "decode_traces": eng.num_decode_traces,
+        "tokens": sample_tokens,
+    }
+
+
+def fast_path_grid(quick: bool) -> List[Dict]:
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    max_slots, window = 4, 8
+    n_windows = 3 if quick else 6
+    occupancies = (2,) if quick else (1, 2, 4)
+    impls = ("xla", "pallas")
+    rows = []
+    for occ in occupancies:
+        for impl in impls:
+            for fast in (True, False):
+                rows.append(_measure_variant(
+                    cfg, params, impl, fast, occ, max_slots, window,
+                    n_windows))
+                print({k: v for k, v in rows[-1].items() if k != "tokens"})
+    # pallas and xla greedy token streams must agree per (mode, occupancy)
+    by = {(r["attn_impl"], r["mode"], r["occupancy"]): r for r in rows}
+    for (impl, mode, occ), r in by.items():
+        if impl == "pallas":
+            ref = by[("xla", mode, occ)]
+            assert r["tokens"] == ref["tokens"], \
+                f"pallas!=xla tokens at mode={mode} occ={occ}"
+    # the headline: fast beats serial at >= 2 occupied slots (xla path)
+    for occ in occupancies:
+        if occ < 2:
+            continue
+        f = by[("xla", "fast", occ)]
+        s = by[("xla", "serial", occ)]
+        assert f["tokens_per_s"] > s["tokens_per_s"], (
+            f"fast path not faster at occupancy {occ}: "
+            f"{f['tokens_per_s']} vs {s['tokens_per_s']} tok/s")
+    for r in rows:
+        r.pop("tokens")
+    return rows
+
+
+# --------------------------------------------------------------------------- #
+# Study 2: policy comparison + live<->sim calibration
+# --------------------------------------------------------------------------- #
+
 
 def _requests(n, seed, max_tokens=48):
     rng = np.random.RandomState(seed)
@@ -31,23 +174,48 @@ def _requests(n, seed, max_tokens=48):
     for i in range(n):
         # bimodal lengths: mostly short, some long (LMSYS-like skew)
         length = int(rng.choice([8, 12, 48], p=[0.5, 0.3, 0.2]))
-        t += float(rng.gamma(0.73, 0.4))
+        # near-burst arrivals tuned to the FAST engine's service rate
+        # (~25 ms/window): the policy comparison is only meaningful under
+        # sustained queue depth — with the pre-fast-path spacing (0.4 s
+        # scale) the engine now drains jobs before a queue ever forms, and
+        # the ISRTF-vs-FCFS gap degenerates to timing noise
+        t += float(rng.gamma(0.73, 0.005))
         reqs.append(Request(
             prompt=f"p{i}", prompt_tokens=[10 + i % 50, 20, 30],
             arrival_time=t, true_output_len=length,
+            # ground-truth stream: the live engine ignores it, but the
+            # calibration replay's SimExecutor *replays* it — a job with an
+            # empty stream would never progress in the simulator
+            output_tokens=[1 + (37 * i + k) % 211 for k in range(length)],
             options=RequestOptions(max_tokens=max_tokens)))
     return reqs
 
 
 def run(quick: bool = False):
+    """ISRTF vs FCFS on the live engine + calibration of the sim profile."""
     cfg = get_config("qwen2-1.5b").reduced()
     params = init_params(jax.random.PRNGKey(0), cfg)
-    n = 8 if quick else 16
+    n = 12 if quick else 24
     rows = []
+    executors = {}
     for policy in ("fcfs", "isrtf"):
         engine = InferenceEngine(cfg, params, EngineConfig(
             max_slots=2, max_len=256, max_output=48, eos_id=-1,
             respect_job_max=True))
+        # warm the prefill/decode shape buckets the study will hit, so the
+        # measured JCTs (and the live<->sim calibration) reflect
+        # steady-state service rather than XLA compile time
+        w0, w1 = _job(9000, 3), _job(9001, 3)
+        engine.add_jobs([w0, w1])               # (2, 16) prefill bucket
+        engine.run_window([w0, w1], 8)          # (8, 2) decode shape
+        engine.evict_job(w1.job_id)
+        engine.evict_job(w0.job_id)
+        w2 = _job(9002, 3)
+        engine.add_jobs([w2])                   # (1, 16) prefill bucket
+        engine.run_window([w2], 8)              # (8, 1) compacted decode
+        engine.evict_job(w2.job_id)
+        executor = EngineExecutor({0: engine})
+        executors[policy] = executor
         server = ElisServer(
             FrontendConfig(
                 n_nodes=1,
@@ -56,7 +224,7 @@ def run(quick: bool = False):
                 preemption=PreemptionConfig(enabled=policy != "fcfs"),
             ),
             OraclePredictor() if policy != "fcfs" else None,
-            EngineExecutor({0: engine}),
+            executor,
         )
         for r in _requests(n, seed=3):
             server.submit(r)
@@ -65,13 +233,124 @@ def run(quick: bool = False):
         rows.append({"policy": policy, "n_jobs": len(done),
                      "jct_mean_s": round(m["jct_mean"], 3),
                      "queuing_delay_mean_s": round(m["queuing_delay_mean"], 3),
-                     "preemptions": m["preemptions"]})
+                     "preemptions": m["preemptions"],
+                     "engine_counters": executor.counters()})
     imp = 100 * (rows[0]["jct_mean_s"] - rows[1]["jct_mean_s"]) / rows[0]["jct_mean_s"]
     rows.append({"live_isrtf_vs_fcfs_improvement_pct": round(imp, 2)})
+
+    # live<->sim calibration: fit the simulator latency model to the
+    # measured ISRTF window log, then replay the same workload in the
+    # simulator under the fitted profile and report the JCT gap
+    # calibration probes: the policy study only ever executes window=8, so
+    # (overhead, rate) are collinear in its log — enrich with a second
+    # window length and both batch widths to make the fit identifiable
+    ex = executors["isrtf"]
+    eng = ex.engines[0]
+    pid = 9100
+    for w in (4, 16):
+        for batch in (1, 2):
+            for _ in range(3):   # first occurrence per shape pays compile
+                probes = [_job(pid + k, 3) for k in range(batch)]
+                pid += batch
+                ex.execute(0, probes, w, 0.0)
+                for j in probes:
+                    eng.evict_job(j.job_id)
+
+    prof = ex.calibrated_profile(name="live-qwen2-reduced")
+    overhead_s = ex.fit_overhead_s
+    from repro.simulate import SimExecutor
+    sim_server = ElisServer(
+        FrontendConfig(
+            n_nodes=1,
+            scheduler=SchedulerConfig(policy="isrtf", window=8, batch_size=2),
+            preemption=PreemptionConfig(enabled=True),
+        ),
+        OraclePredictor(),
+        SimExecutor(prof, sched_overhead_s=overhead_s),
+    )
+    for r in _requests(n, seed=3):
+        sim_server.submit(r)
+    sim_done = sim_server.drain()
+    sim_m = summarize(sim_done)
+    live_jct = rows[1]["jct_mean_s"]
+    rows.append({
+        "calibration": {
+            "decode_ms_1": round(prof.decode_ms_1, 3),
+            "batch_slowdown": round(prof.batch_slowdown, 4),
+            "window_overhead_ms": round(overhead_s * 1000, 3),
+            "sim_jct_mean_s_with_fitted_profile": round(sim_m["jct_mean"], 3),
+            "live_jct_mean_s": live_jct,
+            "live_vs_sim_ratio": round(sim_m["jct_mean"] / max(live_jct, 1e-9), 3),
+        }})
     save_results("live_engine", rows)
     return rows
 
 
+# --------------------------------------------------------------------------- #
+# CI smoke guard
+# --------------------------------------------------------------------------- #
+
+
+def smoke() -> None:
+    """Assert the fast-path invariants on a tiny config (CI guard)."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = InferenceEngine(cfg, params, EngineConfig(
+        max_slots=4, max_len=64, max_output=64, eos_id=-1))
+    # two admission rounds hitting two distinct shape buckets
+    j0, j1 = _job(0, 4), _job(1, 6)
+    eng.add_jobs([j0, j1])                          # (2, 16) bucket
+    j2 = _job(2, 20)
+    eng.add_jobs([j2])                              # (1, 32) bucket
+    assert eng.num_prefill_dispatches == 2, eng.num_prefill_dispatches
+    assert eng.num_prefill_traces == 2, eng.num_prefill_traces
+    assert eng.num_prefill_traces <= eng.prefill_shape_bound()
+    # re-admitting the same shape must not retrace
+    eng.evict_job(2)
+    eng.add_jobs([_job(3, 18)])                     # (1, 32) again
+    assert eng.num_prefill_traces == 2, "shape bucket retraced"
+
+    # masked decode: dispatch count == windows, batch compacted to bucket
+    toks, _ = eng.run_window([j0, j1], 4)
+    assert eng.num_decode_dispatches == 1
+    assert (4, 2) in eng._window_cache, list(eng._window_cache)
+    # one window length in play -> decode traces bounded by the batch
+    # buckets compaction can dispatch
+    assert eng.num_decode_traces <= eng.decode_batch_buckets()
+    frozen = np.asarray(eng.cache["len"])[eng.slot_of[3]]
+    for job, t in zip((j0, j1), toks):
+        job.generated.extend(t)
+    eng.run_window([j0, j1], 4)
+    assert eng.num_decode_dispatches == 2
+    assert eng.num_decode_traces == 1, "decode shape retraced"
+    # the unscheduled occupied slot stayed bit-frozen
+    assert np.asarray(eng.cache["len"])[eng.slot_of[3]] == frozen
+
+    # pallas == xla greedy numerics
+    outs = {}
+    for impl in ("xla", "pallas"):
+        e = InferenceEngine(cfg, params, EngineConfig(
+            max_slots=2, max_len=64, max_output=64, eos_id=-1,
+            attn_impl=impl))
+        outs[impl], _ = e.run_window([_job(7, 5), _job(8, 3)], 6)
+    assert outs["xla"] == outs["pallas"], "pallas decode diverges from xla"
+    print("live_engine smoke: OK (prefill buckets, masked decode, pallas==xla)")
+
+
 if __name__ == "__main__":
-    for r in run(quick=True):
-        print(r)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: fast-path invariants on a tiny config")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        rows = fast_path_grid(quick=args.quick)
+        rows += run(quick=args.quick)
+        for r in rows:
+            print(r)
+        if not args.quick:
+            with open(ROOT_JSON, "w") as f:
+                json.dump(rows, f, indent=1)
+            print(f"wrote {ROOT_JSON}")

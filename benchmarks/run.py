@@ -66,7 +66,12 @@ def main() -> None:
         ("appendixA_preemption", appendixA_preemption.run,
          lambda rows: f"onset_within_2x={sum(1 for r in rows if r.get('within_2x_of_paper'))}/5"),
         ("live_engine", live_engine.run,
-         lambda rows: f"live_gain_pct={rows[-1]['live_isrtf_vs_fcfs_improvement_pct']}"),
+         lambda rows: "live_gain_pct=" + str(next(
+             r["live_isrtf_vs_fcfs_improvement_pct"] for r in rows
+             if "live_isrtf_vs_fcfs_improvement_pct" in r))
+         + ";live_vs_sim_ratio=" + str(next(
+             r["calibration"]["live_vs_sim_ratio"] for r in rows
+             if "calibration" in r))),
         ("ablations", ablations.run,
          lambda rows: "mlfq_gain_pct=" + str(next(
              (r["gain_vs_fcfs_pct"] for r in rows

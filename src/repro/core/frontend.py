@@ -112,6 +112,11 @@ class Backend(abc.ABC):
         """Currently free job slots on ``node``; None = unbounded."""
         return None
 
+    def counters(self) -> Dict[str, int]:
+        """Backend-specific compile/dispatch counters for introspection
+        (e.g. the live engine's recompile-storm hooks); {} = none."""
+        return {}
+
 
 @dataclass(frozen=True)
 class Event:

@@ -12,9 +12,34 @@ The two features the paper adds to vLLM are first-class here:
   * **configurable priorities** — the scheduler decides which jobs hold
     slots each window; ``evict``/``add`` implement priority preemption.
 
-Prefill padding: attention families right-pad prompts to a bucket length
-(causality + the kv_len mask make pads harmless); SSM/hybrid families use
-exact-length prefill because recurrent state would absorb pad positions.
+Fast path (DESIGN.md §3.2–§3.4):
+  * **batched bucketed prefill** — ``add_jobs`` admits every newly scheduled
+    job in ONE padded ``(batch_bucket, seq_bucket)`` prefill dispatch per
+    window instead of N batch-1 calls; the shape-bucket ladder is the same
+    one ``BGEPredictor`` uses (``repro.data.dataset``), so the jitted
+    prefill compiles once per bucket no matter how admissions arrive.
+    Attention families right-pad prompts to the bucket (causality + the
+    kv_len mask make pads harmless); SSM/hybrid families keep exact-length
+    batch-1 prefill because recurrent state would absorb pad positions.
+  * **masked decode windows** — each decode dispatch carries a per-slot
+    ``active`` mask (occupied ∧ not-EOS).  When occupancy is below capacity
+    the engine *compacts*: it gathers the scheduled slots into a
+    ``batch_bucket``-sized sub-cache, decodes only those rows, and scatters
+    back —
+    empty slots stop burning FLOPs.  Within the window, a slot that emits
+    EOS is *frozen* for the remaining ``lax.scan`` steps: no KV/state
+    write, no ``len`` advance, PAD emissions (see ``T.decode_step``).
+  * **Pallas decode attention** — ``attn_impl="pallas"`` routes
+    ``T.decode_step`` through :mod:`repro.kernels.decode_attention` with
+    the per-slot ``len`` vector as kv lengths; ``"xla"`` stays the
+    reference path (numerics-equivalence is CI-guarded).
+  * **compile/dispatch counters** — ``num_prefill_traces`` /
+    ``num_prefill_dispatches`` / ``num_decode_traces`` /
+    ``num_decode_dispatches`` mirror ``BGEPredictor``'s recompile-storm
+    hooks; ``EngineExecutor.counters()`` aggregates them and
+    ``EngineExecutor.calibrated_profile()`` fits the measured window
+    durations back onto the simulator's latency model (live↔sim
+    calibration).
 """
 from __future__ import annotations
 
@@ -28,9 +53,14 @@ import numpy as np
 
 from repro.core.frontend import Backend, ExecResult
 from repro.core.job import Job
+from repro.data.dataset import batch_bucket, n_shape_buckets, seq_bucket
 from repro.data.tokenizer import EOS_ID, PAD_ID
 from repro.engine.sampler import SamplerConfig, sample
 from repro.models import transformer as T
+
+#: recurrent-state families prefill at exact length (pad positions would be
+#: absorbed into the state), so they keep serial batch-1 admission
+EXACT_PREFILL_FAMILIES = ("ssm", "hybrid")
 
 
 @dataclass(frozen=True)
@@ -39,23 +69,68 @@ class EngineConfig:
     max_len: int = 512
     max_output: int = 1024
     eos_id: int = EOS_ID
+    #: smallest prefill sequence bucket; padded lengths follow the
+    #: power-of-two ``repro.data.seq_bucket`` ladder up to ``max_len``
     prefill_bucket: int = 16
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
+    #: decode attention implementation: "xla" (einsum reference) or
+    #: "pallas" (flash-decode kernel over the slot cache)
     attn_impl: str = "xla"
+    #: admit all newly scheduled jobs in one padded (batch, seq)-bucketed
+    #: prefill dispatch (False = one batch-1 dispatch per job, the
+    #: pre-fast-path baseline kept for benchmarking)
+    batched_prefill: bool = True
+    #: compact decode dispatches to the batch bucket of the *scheduled*
+    #: slots and freeze unscheduled/EOS slots (False = always decode the
+    #: full ``max_slots`` batch, the pre-fast-path baseline)
+    masked_decode: bool = True
     #: honour each request's own token budget (job.true_output_len acts as
     #: the request's ``max_tokens``, like vLLM's per-request cap)
     respect_job_max: bool = False
 
 
-def _slot_update(big, small, slot: int):
-    """Write a batch-1 cache pytree into slot ``slot`` of the batched cache."""
+# --------------------------------------------------------------------------- #
+# Slot-cache gather/scatter
+# --------------------------------------------------------------------------- #
 
-    def upd(b, s):
-        if b.ndim == 1:  # per-slot "len" vector
-            return b.at[slot].set(s[0])
-        return b.at[:, slot].set(s[:, 0])
 
-    return jax.tree_util.tree_map(upd, big, small)
+def _batch_axis(path, ndim: int) -> int:
+    """Slot (batch) axis of a cache leaf.
+
+    Convention (see T.init_cache): 1-D leaves are the per-slot ``len``
+    vector; stacked KV/state leaves carry a leading layer/site axis with
+    batch at axis 1 — except the hybrid family's ``groups_ssm``, whose
+    states are stacked (n_groups, inner, batch, ...).
+    """
+    if ndim == 1:
+        return 0
+    top = getattr(path[0], "key", None)
+    return 2 if top == "groups_ssm" else 1
+
+
+def _gather_slots(cache, idx: jnp.ndarray):
+    """Gather slot rows ``idx`` of the cache pytree into a sub-cache."""
+
+    def take(path, leaf):
+        return jnp.take(leaf, idx, axis=_batch_axis(path, leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(take, cache)
+
+
+def _scatter_slots(big, small, slots: Sequence[int], n: int):
+    """Write rows ``0..n-1`` of the batched ``small`` cache pytree into the
+    given ``slots`` of ``big`` (rows beyond ``n`` are bucket padding)."""
+    sl = jnp.asarray(list(slots)[:n], jnp.int32)
+
+    def put(path, b, s):
+        ax = _batch_axis(path, b.ndim)
+        if ax == 0:
+            return b.at[sl].set(s[:n])
+        if ax == 1:
+            return b.at[:, sl].set(s[:, :n])
+        return b.at[:, :, sl].set(s[:, :, :n])
+
+    return jax.tree_util.tree_map_with_path(put, big, small)
 
 
 class InferenceEngine:
@@ -73,42 +148,81 @@ class InferenceEngine:
         self.last_token = np.full((cfg.max_slots, 1), PAD_ID, np.int32)
         self._key = jax.random.PRNGKey(0)
 
+        #: compile/dispatch introspection (mirrors BGEPredictor's hooks):
+        #: traces increment via a Python side effect that runs only while
+        #: JAX traces a new input shape, so they count compiled shape
+        #: buckets, not calls
+        self.num_prefill_dispatches = 0
+        self.num_decode_dispatches = 0
+        self._prefill_traces = 0
+        self._decode_traces = 0
+
         mc, ec = model_cfg, cfg
 
-        @jax.jit
-        def _prefill(params, tokens, cache1, last_index):
+        def _prefill_fn(params, tokens, cache1, last_index):
+            self._prefill_traces += 1  # side effect: once per shape bucket
             batch = {"tokens": tokens}
             return T.prefill(params, mc, batch, cache1,
                              attn_impl=ec.attn_impl, last_index=last_index)
 
-        self._prefill = _prefill
-        self._window_cache: Dict[int, object] = {}
+        self._prefill = jax.jit(_prefill_fn)
+        self._window_cache: Dict[Tuple[int, int], object] = {}
         #: first generated token (sampled from prefill logits), pending emission
         self._pending_first: Dict[int, int] = {}
 
     # ------------------------------------------------------------------ #
-    def _decode_window(self, window: int):
-        """jit per window length (window is static for lax.scan)."""
-        if window not in self._window_cache:
+    @property
+    def num_prefill_traces(self) -> int:
+        return self._prefill_traces
+
+    @property
+    def num_decode_traces(self) -> int:
+        return self._decode_traces
+
+    def prefill_shape_bound(self) -> int:
+        """Upper bound on distinct prefill shapes the bucketing can emit
+        (attention families; exact-length families are unbounded by
+        design).  The CI smoke guard asserts ``num_prefill_traces`` stays
+        under this no matter how admissions arrive."""
+        return n_shape_buckets(self.cfg.max_slots, self.cfg.max_len,
+                               self.cfg.prefill_bucket)
+
+    def decode_batch_buckets(self) -> int:
+        """Distinct decode batch sizes compaction can dispatch."""
+        return len({min(batch_bucket(n), self.cfg.max_slots)
+                    for n in range(1, self.cfg.max_slots + 1)})
+
+    # ------------------------------------------------------------------ #
+    def _decode_window(self, window: int, batch: int):
+        """jit per (window length, compacted batch size) — both static."""
+        key2 = (window, batch)
+        if key2 not in self._window_cache:
             mc, ec = self.model_cfg, self.cfg
 
-            @jax.jit
-            def fn(params, cache, last_tokens, key):
-                def step(carry, _):
-                    cache, toks, key = carry
-                    logits, cache = T.decode_step(params, mc, toks, cache,
-                                                  attn_impl=ec.attn_impl)
-                    key, sub = jax.random.split(key)
-                    nxt = sample(logits[:, -1, :], sub, ec.sampler)[:, None]
-                    return (cache, nxt, key), nxt[:, 0]
+            def fn(params, cache, last_tokens, alive, rng):
+                self._decode_traces += 1  # side effect: once per shape
 
-                (cache, _, _), toks = jax.lax.scan(
-                    step, (cache, last_tokens, key), None, length=window
+                def step(carry, _):
+                    cache, toks, alive, rng = carry
+                    logits, cache = T.decode_step(params, mc, toks, cache,
+                                                  attn_impl=ec.attn_impl,
+                                                  active=alive)
+                    rng, sub = jax.random.split(rng)
+                    nxt = sample(logits[:, -1, :], sub, ec.sampler,
+                                 active=alive, pad_token=PAD_ID)[:, None]
+                    # EOS freezes the slot for the rest of the scan: no
+                    # KV/state write, no len advance, PAD emissions
+                    alive = alive & (nxt[:, 0] != ec.eos_id)
+                    return (cache, nxt, alive, rng), nxt[:, 0]
+
+                (cache, _, _, _), toks = jax.lax.scan(
+                    step, (cache, last_tokens, alive, rng), None,
+                    length=window
                 )
                 return cache, jnp.swapaxes(toks, 0, 1)
 
-            self._window_cache[window] = fn
-        return self._window_cache[window]
+            self._window_cache[key2] = jax.jit(fn)
+        return self._window_cache[key2]
 
     # ------------------------------------------------------------------ #
     def free_slots(self) -> int:
@@ -117,41 +231,99 @@ class InferenceEngine:
     def has_job(self, job_id: int) -> bool:
         return job_id in self.slot_of
 
-    def add_job(self, job: Job) -> int:
-        """Prefill into a free slot.
+    def _resume_tokens(self, job: Job) -> List[int]:
+        """Token stream to prefill for a job.
 
-        Fresh job: consume the prompt; *sample the first output token from
-        the prefill logits* (emitted by the next ``run_window``).
+        Fresh job: the prompt; *the first output token is sampled from the
+        prefill logits* (emitted by the next ``run_window``).
         Resumed job (preempted earlier): recompute KV for
         ``prompt + generated[:-1]`` and seed decode with the last already-
         emitted token — nothing is double-emitted.
         """
-        slot = self.slot_job.index(None)
         if job.generated:
-            tokens = list(job.prompt_tokens) + list(job.generated)[:-1]
+            return list(job.prompt_tokens) + list(job.generated)[:-1]
+        return list(job.prompt_tokens)
+
+    def add_job(self, job: Job) -> int:
+        """Prefill one job into a free slot (batch-1 dispatch).  A job
+        already holding a slot keeps it (no double admission)."""
+        return self.add_jobs([job])[0]
+
+    def add_jobs(self, jobs: Sequence[Job]) -> List[int]:
+        """Admit every job not yet holding a slot.
+
+        Attention families: ONE padded ``(batch_bucket, seq_bucket)``
+        prefill dispatch for the whole group.  SSM/hybrid (or
+        ``batched_prefill=False``): serial batch-1 admissions.
+        Returns each job's slot, aligned with ``jobs`` (already-admitted
+        jobs report the slot they hold).
+        """
+        todo = [j for j in jobs if not self.has_job(j.job_id)]
+        if todo:
+            if len(todo) > self.free_slots():
+                # all-or-nothing: fail before any partial serial admission
+                raise RuntimeError(
+                    f"admitting {len(todo)} jobs needs {len(todo)} free "
+                    f"slots, engine has {self.free_slots()}")
+            serial = (not self.cfg.batched_prefill
+                      or self.model_cfg.family in EXACT_PREFILL_FAMILIES)
+            if serial:
+                for j in todo:
+                    self._admit([j])
+            else:
+                self._admit(todo)
+        return [self.slot_of[j.job_id] for j in jobs]
+
+    def _admit(self, jobs: Sequence[Job]) -> List[int]:
+        """One prefill dispatch admitting ``jobs``."""
+        if len(jobs) > self.free_slots():
+            # check BEFORE the dispatch: a full engine must fail loudly,
+            # not pay a prefill and then mis-assign slots
+            raise RuntimeError(
+                f"admitting {len(jobs)} jobs needs {len(jobs)} free slots, "
+                f"engine has {self.free_slots()}")
+        exact = self.model_cfg.family in EXACT_PREFILL_FAMILIES
+        token_lists = [self._resume_tokens(j) for j in jobs]
+        true_lens = [len(t) for t in token_lists]
+        longest = max(true_lens)
+        if longest > self.cfg.max_len:
+            raise ValueError(
+                f"prompt of {longest} tokens exceeds max_len="
+                f"{self.cfg.max_len}")
+        if exact:
+            # recurrent state must stay clean: exact length, batch 1
+            assert len(jobs) == 1, "exact-length families admit serially"
+            bb, sl = 1, true_lens[0]
         else:
-            tokens = list(job.prompt_tokens)
-        true_len = len(tokens)
-        if self.model_cfg.family in ("ssm", "hybrid"):
-            padded = tokens  # exact length (recurrent state must stay clean)
-        else:
-            bucket = -(-true_len // self.cfg.prefill_bucket) * self.cfg.prefill_bucket
-            padded = tokens + [PAD_ID] * (bucket - true_len)
-        arr = jnp.asarray([padded], jnp.int32)
-        cache1 = T.init_cache(self.model_cfg, 1, self.cfg.max_len)
-        logits, cache1 = self._prefill(self.params, arr, cache1,
-                                       jnp.asarray([true_len - 1]))
-        cache1["len"] = jnp.asarray([true_len], jnp.int32)
-        self.cache = _slot_update(self.cache, cache1, slot)
-        self.slot_job[slot] = job.job_id
-        self.slot_of[job.job_id] = slot
-        if job.generated:
-            self.last_token[slot, 0] = job.generated[-1]
-        else:
-            first = int(np.argmax(np.asarray(logits)[0, -1]))
-            self._pending_first[job.job_id] = first
-            self.last_token[slot, 0] = first
-        return slot
+            bb = batch_bucket(len(jobs))
+            sl = seq_bucket(longest, self.cfg.max_len,
+                            min_bucket=self.cfg.prefill_bucket)
+        toks = np.full((bb, sl), PAD_ID, np.int32)
+        last_index = np.zeros((bb,), np.int32)
+        for i, t in enumerate(token_lists):
+            toks[i, : len(t)] = t
+            last_index[i] = len(t) - 1
+        cacheN = T.init_cache(self.model_cfg, bb, self.cfg.max_len)
+        self.num_prefill_dispatches += 1
+        logits, cacheN = self._prefill(self.params, jnp.asarray(toks), cacheN,
+                                       jnp.asarray(last_index))
+        # per-row true lengths (prefill stamps the padded length)
+        cacheN["len"] = jnp.asarray(
+            true_lens + [0] * (bb - len(jobs)), jnp.int32)
+        slots = [s for s, owner in enumerate(self.slot_job)
+                 if owner is None][: len(jobs)]
+        self.cache = _scatter_slots(self.cache, cacheN, slots, len(jobs))
+        logits_np = np.asarray(logits)
+        for i, (job, slot) in enumerate(zip(jobs, slots)):
+            self.slot_job[slot] = job.job_id
+            self.slot_of[job.job_id] = slot
+            if job.generated:
+                self.last_token[slot, 0] = job.generated[-1]
+            else:
+                first = int(np.argmax(logits_np[i, -1]))
+                self._pending_first[job.job_id] = first
+                self.last_token[slot, 0] = first
+        return slots
 
     def evict_job(self, job_id: int) -> None:
         slot = self.slot_of.pop(job_id, None)
@@ -162,26 +334,62 @@ class InferenceEngine:
 
     # ------------------------------------------------------------------ #
     def run_window(self, jobs: Sequence[Job], window: int) -> Tuple[List[List[int]], List[bool]]:
-        """Execute K decode steps for ``jobs`` (all must hold slots).
-        Returns (new_tokens_per_job, finished_per_job)."""
-        for job in jobs:
-            if not self.has_job(job.job_id):
-                self.add_job(job)
-        fn = self._decode_window(window)
-        self._key, sub = jax.random.split(self._key)
-        self.cache, toks = fn(self.params, self.cache,
-                              jnp.asarray(self.last_token), sub)
-        toks = np.asarray(toks)  # (slots, K)
+        """Execute K decode steps for ``jobs`` (admitting any that lack a
+        slot via one batched prefill).  Returns
+        (new_tokens_per_job, finished_per_job)."""
+        if not jobs:
+            return [], []
+        self.add_jobs(jobs)
+        slots = [self.slot_of[job.job_id] for job in jobs]
+        prev_lens = np.asarray(self.cache["len"]).copy()
+        ms = self.cfg.max_slots
+        order = sorted(slots)
+        db = min(batch_bucket(len(order)), ms)
+        compact = self.cfg.masked_decode and db < ms
+        if compact:
+            # decode only the scheduled slots, padded to the batch bucket
+            # (pad rows duplicate a real slot but start dead, so they are
+            # frozen no-ops); gather/scatter costs one pass over the active
+            # slots' cache per *window*, decode reads it K times
+            gidx = np.asarray(order + [order[0]] * (db - len(order)),
+                              np.int32)
+            sub_cache = _gather_slots(self.cache, jnp.asarray(gidx))
+            sub_last = jnp.asarray(self.last_token[gidx])
+            alive0 = np.zeros((db,), bool)
+            alive0[: len(order)] = True
+            row_of = {slot: r for r, slot in enumerate(order)}
+        else:
+            sub_cache = self.cache
+            sub_last = jnp.asarray(self.last_token)
+            if self.cfg.masked_decode:
+                # full-width dispatch, but unscheduled slots stay frozen
+                alive0 = np.zeros((ms,), bool)
+                alive0[slots] = True
+            else:
+                # pre-fast-path baseline: every slot advances every window
+                alive0 = np.ones((ms,), bool)
+            row_of = {s: s for s in slots}
+        fn = self._decode_window(window, int(sub_last.shape[0]))
+        self._key, sub_key = jax.random.split(self._key)
+        self.num_decode_dispatches += 1
+        new_cache, toks = fn(self.params, sub_cache, sub_last,
+                             jnp.asarray(alive0), sub_key)
+        toks = np.asarray(toks)  # (rows, K)
+        if compact:
+            self.cache = _scatter_slots(self.cache, new_cache, order,
+                                        len(order))
+        else:
+            self.cache = new_cache
         out_tokens: List[List[int]] = []
         finished: List[bool] = []
         lens = np.asarray(self.cache["len"]).copy()
         for job in jobs:
             slot = self.slot_of[job.job_id]
-            scanned = toks[slot].tolist()
+            scanned = toks[row_of[slot]].tolist()
             pending = self._pending_first.pop(job.job_id, None)
             if pending is not None:
                 # first emission comes from the prefill logits; the scan's
-                # K-th token is unconsumed (roll its cache write back)
+                # K-th token is unconsumed (its cache write is rolled back)
                 seq = [pending] + scanned[: window - 1]
                 consumed_scanned = len(seq) - 1
             else:
@@ -207,8 +415,10 @@ class InferenceEngine:
             out_tokens.append(seq)
             finished.append(fin)
             self.last_token[slot, 0] = seq[-1] if seq else PAD_ID
-            # roll back the cache pointer past unconsumed scan writes
-            lens[slot] -= window - consumed_scanned
+            # the cache pointer advances exactly one position per consumed
+            # scan write — robust to both EOS freezing (which already
+            # stopped advancing) and cap truncation (which did not)
+            lens[slot] = prev_lens[slot] + max(consumed_scanned, 0)
         self.cache["len"] = jnp.asarray(lens)
         return out_tokens, finished
 
@@ -220,10 +430,16 @@ class InferenceEngine:
 
 class EngineExecutor(Backend):
     """Wraps per-node InferenceEngines behind the frontend Backend ABC.
-    Durations are measured wall-clock — the live-system evaluation mode."""
+    Durations are measured wall-clock — the live-system evaluation mode.
+
+    Every executed window is appended to ``window_log`` (node, batch,
+    window, duration, tokens); ``calibrated_profile()`` fits those samples
+    back onto the simulator's latency model so a live run can parameterise
+    a :class:`repro.simulate.SimExecutor` (live↔sim calibration)."""
 
     def __init__(self, engines: Dict[int, InferenceEngine]):
         self.engines = engines
+        self.window_log: List[Dict] = []
 
     def capacity(self, node: int) -> int:
         return self.engines[node].cfg.max_slots
@@ -245,7 +461,87 @@ class EngineExecutor(Backend):
             )
         tokens, finished = eng.run_window(jobs, window)
         dur = time.perf_counter() - t0
+        self.window_log.append({
+            "node": node, "batch": len(jobs), "window": window,
+            "duration_s": dur, "tokens": sum(len(t) for t in tokens),
+        })
         return ExecResult(dur, tokens, finished)
 
     def evict(self, node: int, job: Job) -> None:
         self.engines[node].evict_job(job.job_id)
+
+    # ------------------------------------------------------------------ #
+    def counters(self) -> Dict[str, int]:
+        """Aggregated compile/dispatch counters across this executor's
+        engines (the recompile-storm / dead-FLOPs introspection hooks)."""
+        agg = {"prefill_traces": 0, "prefill_dispatches": 0,
+               "decode_traces": 0, "decode_dispatches": 0,
+               "windows_executed": len(self.window_log)}
+        for eng in self.engines.values():
+            agg["prefill_traces"] += eng.num_prefill_traces
+            agg["prefill_dispatches"] += eng.num_prefill_dispatches
+            agg["decode_traces"] += eng.num_decode_traces
+            agg["decode_dispatches"] += eng.num_decode_dispatches
+        return agg
+
+    def calibrated_profile(self, name: str = "live-calibrated",
+                           params_b: Optional[float] = None,
+                           preempt_batch: int = 64,
+                           mem_limit_frac: float = 0.4):
+        """Fit the simulator's latency model to the measured windows.
+
+        The model (``repro.simulate.profiles``):
+            duration ≈ overhead + window · d1 · (1 + slowdown · (batch-1))
+        is linear in (overhead, d1, d1·slowdown); a least-squares fit over
+        ``window_log`` (dropping each (node, batch, window) shape's first
+        occurrence, which pays XLA compile) recovers ``decode_ms_1`` and
+        ``batch_slowdown``.  Returns a :class:`ModelProfile` usable by
+        ``SimExecutor`` — simulate *this* live engine at cluster scale.
+        """
+        from repro.simulate.profiles import (CALIBRATION_MEAN_TOKENS,
+                                             ModelProfile)
+        seen = set()
+        samples = []
+        for rec in self.window_log:
+            key = (rec["node"], rec["batch"], rec["window"])
+            if key in seen:
+                samples.append(rec)
+            else:
+                seen.add(key)  # first occurrence pays compile — drop it
+        if not samples:
+            samples = list(self.window_log)
+        if not samples:
+            raise ValueError("no executed windows to calibrate from")
+        w = np.array([r["window"] for r in samples], float)
+        b = np.array([r["batch"] for r in samples], float)
+        d = np.array([r["duration_s"] for r in samples], float)
+        X = np.stack([np.ones_like(w), w, w * (b - 1)], axis=1)
+        if np.linalg.matrix_rank(X) >= 3:
+            (o, a, c), *_ = np.linalg.lstsq(X, d, rcond=None)
+            a = float(max(a, 1e-9))
+            slowdown = float(min(max(c / a, 0.0), 10.0))
+            overhead = float(max(o, 0.0))
+        else:
+            # degenerate design (single batch size or window length):
+            # attribute everything to the per-token rate
+            a = float(max(np.mean(d / np.maximum(w, 1.0)), 1e-9))
+            slowdown = 0.0
+            overhead = 0.0
+        #: per-window fixed cost (dispatch + host loop) the latency model's
+        #: intercept absorbed — feed it to SimExecutor.sched_overhead_s so
+        #: a calibrated replay prices whole windows, not just tokens
+        self.fit_overhead_s = overhead
+        eng = next(iter(self.engines.values()))
+        mc = eng.model_cfg
+        if params_b is None:
+            # rough dense-transformer parameter count from the config
+            params_b = 12 * mc.n_layers * mc.d_model ** 2 / 1e9
+        return ModelProfile(
+            name=name, params_b=params_b,
+            avg_latency_ms=a * 1000.0 * CALIBRATION_MEAN_TOKENS,
+            n_layers=mc.n_layers,
+            n_kv_heads=mc.n_kv_heads or mc.n_heads,
+            head_dim=mc.head_dim,
+            preempt_batch=preempt_batch, mem_limit_frac=mem_limit_frac,
+            batch_slowdown=slowdown,
+        )

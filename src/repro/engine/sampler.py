@@ -13,13 +13,24 @@ class SamplerConfig:
     top_k: int = 0            # 0 = full softmax
 
 
-def sample(logits: jnp.ndarray, key, cfg: SamplerConfig) -> jnp.ndarray:
-    """logits (B, V) -> (B,) int32."""
+def sample(logits: jnp.ndarray, key, cfg: SamplerConfig,
+           active=None, pad_token: int = 0) -> jnp.ndarray:
+    """logits (B, V) -> (B,) int32.
+
+    ``active`` (B,) bool — rows marked inactive (empty or EOS-frozen decode
+    slots sharing a dispatch) emit ``pad_token`` instead of a sample.  The
+    RNG key consumption is identical with or without the mask, so masked
+    and unmasked engines draw the same stochastic streams for live rows.
+    """
     if cfg.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / cfg.temperature
-    if cfg.top_k > 0:
-        top, _ = jax.lax.top_k(logits, cfg.top_k)
-        kth = top[..., -1:]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        logits = logits / cfg.temperature
+        if cfg.top_k > 0:
+            top, _ = jax.lax.top_k(logits, cfg.top_k)
+            kth = top[..., -1:]
+            logits = jnp.where(logits < kth, -jnp.inf, logits)
+        tok = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    if active is not None:
+        tok = jnp.where(active, tok, jnp.int32(pad_token))
+    return tok

@@ -80,6 +80,21 @@ def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
     return (q.astype(jnp.float32) * scale[..., None, None]).astype(dtype)
 
 
+def masked_row_write(buf: jnp.ndarray, slot: jnp.ndarray, val: jnp.ndarray,
+                     active=None) -> jnp.ndarray:
+    """Write ``val`` (B, ...) into ``buf`` (B, L, ...) at per-row position
+    ``slot`` (B,).  Rows with ``active=False`` keep their previous value —
+    the no-op that lets frozen decode slots (EOS-finished or simply
+    unoccupied) share a dispatch with live slots without corrupting their
+    cache.  The select touches one position per row, so the masked write
+    costs a (B, ...) gather, not a whole-buffer copy."""
+    rows = jnp.arange(buf.shape[0])
+    if active is not None:
+        keep = active.reshape((-1,) + (1,) * (val.ndim - 1))
+        val = jnp.where(keep, val, buf[rows, slot])
+    return buf.at[rows, slot].set(val)
+
+
 # --------------------------------------------------------------------------- #
 # Initialisers
 # --------------------------------------------------------------------------- #
@@ -346,6 +361,7 @@ def attention_block(
     cache: Optional[KVCache] = None,
     cur_index=None,
     attn_impl: str = "xla",
+    active=None,
 ) -> Tuple[jnp.ndarray, object]:
     """Full attention block: proj -> rope -> (cache update) -> sdpa -> out proj.
 
@@ -353,6 +369,10 @@ def attention_block(
     returns (out, (k, v)) for cache seeding.
     Decode: ``cache`` is a :class:`KVCache` with buffers (B, L, KH, D) and
     ``cur_index`` is the per-slot token count; x is (B, 1, d_model).
+    ``active`` (B,) bool, decode only: rows marked inactive skip their KV
+    write (their buffer row is bit-identical afterwards) — the caller
+    freezes their ``len`` to match, so a frozen slot's cache is untouched
+    by the dispatch it shared with live slots.
     """
     b, s, _ = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -393,15 +413,15 @@ def attention_block(
         if cache.quantized:
             kq, ks = quantize_kv(k)
             vq, vs = quantize_kv(v)
-            kbuf = kbuf.at[jnp.arange(b), slot].set(kq[:, 0])
-            vbuf = vbuf.at[jnp.arange(b), slot].set(vq[:, 0])
-            k_sc = cache.k_scale.at[jnp.arange(b), slot].set(ks[:, 0])
-            v_sc = cache.v_scale.at[jnp.arange(b), slot].set(vs[:, 0])
+            kbuf = masked_row_write(kbuf, slot, kq[:, 0], active)
+            vbuf = masked_row_write(vbuf, slot, vq[:, 0], active)
+            k_sc = masked_row_write(cache.k_scale, slot, ks[:, 0], active)
+            v_sc = masked_row_write(cache.v_scale, slot, vs[:, 0], active)
             kread = dequantize_kv(kbuf, k_sc, q.dtype)
             vread = dequantize_kv(vbuf, v_sc, q.dtype)
         else:
-            kbuf = kbuf.at[jnp.arange(b), slot].set(k[:, 0])
-            vbuf = vbuf.at[jnp.arange(b), slot].set(v[:, 0])
+            kbuf = masked_row_write(kbuf, slot, k[:, 0], active)
+            vbuf = masked_row_write(vbuf, slot, v[:, 0], active)
             k_sc = v_sc = None
             kread, vread = kbuf, vbuf
         if ringed:

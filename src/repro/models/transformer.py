@@ -186,11 +186,11 @@ def unembed(params: Params, cfg, h: jnp.ndarray) -> jnp.ndarray:
 
 
 def _dense_body(cfg, attn_impl, moe_impl, lp: Params, x, cos_sin,
-                cache=None, cur_index=None):
+                cache=None, cur_index=None, active=None):
     h = L.apply_norm(cfg, lp["attn_norm"], x)
     attn_out, kv = L.attention_block(
         lp["attn"], cfg, h, cos_sin, cache=cache, cur_index=cur_index,
-        attn_impl=attn_impl,
+        attn_impl=attn_impl, active=active,
     )
     x = x + attn_out
     h = L.apply_norm(cfg, lp["mlp_norm"], x)
@@ -201,12 +201,18 @@ def _dense_body(cfg, attn_impl, moe_impl, lp: Params, x, cos_sin,
     return x + out, kv, aux
 
 
-def _ssm_body(cfg, impl, lp: Params, x, state=None):
+def _ssm_body(cfg, impl, lp: Params, x, state=None, active=None):
     h = L.apply_norm(cfg, lp["norm"], x)
     if state is None:
         out, _ = S.ssm_forward(lp["ssm"], cfg, h, impl=impl)
         return x + out, None
     out, new_state = S.ssm_decode_step(lp["ssm"], cfg, h, state)
+    if active is not None:
+        # frozen decode slots keep their recurrent state bit-identical
+        new_state = jax.tree_util.tree_map(
+            lambda old, new: jnp.where(
+                active.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+            state, new_state)
     return x + out, new_state
 
 
@@ -543,8 +549,19 @@ def prefill(params: Params, cfg, batch: Dict, cache: Cache,
 
 
 def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
-                *, attn_impl: str = "xla", moe_impl: str = "grouped"):
-    """One-token auto-regressive step.  tokens (B, 1) -> (logits, cache)."""
+                *, attn_impl: str = "xla", moe_impl: str = "grouped",
+                active: Optional[jnp.ndarray] = None):
+    """One-token auto-regressive step.  tokens (B, 1) -> (logits, cache).
+
+    ``active`` (B,) bool — the continuous-batching mask: rows marked
+    inactive (unoccupied slots, or slots frozen at EOS mid-window) are
+    computed but their cache is left bit-identical — no KV/state write, no
+    ``len`` advance — so a statically-shaped batch can carry dead slots
+    through a shared dispatch without corrupting them.  ``attn_impl="pallas"``
+    routes the attention read through the Pallas flash-decode kernel
+    (:mod:`repro.kernels.decode_attention`) with the per-slot ``len`` vector
+    as kv lengths; ``"xla"`` is the einsum reference path.
+    """
     b = tokens.shape[0]
     cur = jnp.broadcast_to(jnp.asarray(cache["len"]), (b,))  # per-slot lengths
     h = params["embed"][tokens]
@@ -573,7 +590,7 @@ def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
                 lp, kb, vb = inp
                 lc = KVCache(kb, vb, ring)
             x, nkv, a = _dense_body(cfg, attn_impl, moe_impl, lp, x, cos_sin,
-                                    cache=lc, cur_index=cur)
+                                    cache=lc, cur_index=cur, active=active)
             if quant:
                 return (x, aux + a), (nkv.k, nkv.v, nkv.k_scale, nkv.v_scale)
             return (x, aux + a), (nkv.k, nkv.v)
@@ -592,7 +609,7 @@ def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
     elif cfg.family == "ssm":
         def body(x, inp):
             lp, st = inp
-            x, nst = _ssm_body(cfg, attn_impl, lp, x, state=st)
+            x, nst = _ssm_body(cfg, attn_impl, lp, x, state=st, active=active)
             return x, nst
 
         h, nstates = layer_scan(body, h, (params["layers"], cache["ssm"]))
@@ -604,7 +621,7 @@ def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
 
         def inner(x, inp):
             lp, st = inp
-            x, nst = _ssm_body(cfg, attn_impl, lp, x, state=st)
+            x, nst = _ssm_body(cfg, attn_impl, lp, x, state=st, active=active)
             return x, nst
 
         def group(x, inp):
@@ -612,7 +629,7 @@ def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
             x, ngst = layer_scan(inner, x, (gp, gst))
             x, nkv, _ = _dense_body(cfg, attn_impl, moe_impl, shared, x,
                                     cos_sin, cache=KVCache(kb, vb, ring),
-                                    cur_index=cur)
+                                    cur_index=cur, active=active)
             return x, (ngst, nkv.k, nkv.v)
 
         h, (ngroups, knew, vnew) = layer_scan(
@@ -634,7 +651,7 @@ def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
             hh = L.apply_norm(cfg, lp["attn_norm"], x)
             attn_out, nkv = L.attention_block(
                 lp["attn"], cfg, hh, None, cache=KVCache(kb, vb),
-                cur_index=cur, attn_impl=attn_impl,
+                cur_index=cur, attn_impl=attn_impl, active=active,
             )
             x = x + attn_out
             hh = L.apply_norm(cfg, lp["cross_norm"], x)
@@ -650,7 +667,10 @@ def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
     else:
         raise ValueError(cfg.family)
 
-    new_cache["len"] = cur + 1
+    if active is not None:
+        new_cache["len"] = jnp.where(active, cur + 1, cur)
+    else:
+        new_cache["len"] = cur + 1
     return unembed(params, cfg, h), new_cache
 
 

@@ -102,6 +102,17 @@ class SimExecutor(Backend):
         finished: List[bool] = []
         max_new = 0
         for job in jobs:
+            if len(job.output_tokens) < job.true_output_len:
+                # the simulator REPLAYS ground-truth streams — a job whose
+                # stream is shorter than its declared length would stop
+                # progressing once the stream runs dry and spin the event
+                # loop forever; fail loudly instead (the live engine has no
+                # such requirement: it invents tokens)
+                raise ValueError(
+                    f"job {job.job_id}: output_tokens has "
+                    f"{len(job.output_tokens)} tokens but true_output_len="
+                    f"{job.true_output_len}; the simulator cannot replay it "
+                    "(use repro.data.workload streams or fill output_tokens)")
             remaining = job.true_output_len - job.tokens_generated
             n_new = min(window, remaining)
             start = job.tokens_generated
