@@ -37,7 +37,7 @@ def predictor_quality_sweep(quick: bool = False):
         # patch the predictor's noise level
         orig = R.make_predictor
 
-        def patched(kind, seed=0, bge=None, _s=sigma):
+        def patched(kind, seed=0, bge=None, _s=sigma, **_kw):
             if _s == 0.0:
                 from repro.core import OraclePredictor
 

@@ -29,6 +29,7 @@ def main() -> None:
         fig7_scalability,
         live_engine,
         multi_node,
+        predictor_calibration,
         roofline,
         scheduler_overhead,
         table2_predictor,
@@ -55,6 +56,11 @@ def main() -> None:
          + ";max_traces=" + str(max(r.get("num_traces", 0) for r in rows))),
         ("table5_jct", table5_jct.run,
          lambda rows: f"mean_isrtf_gain_pct={sum(r['isrtf_vs_fcfs_pct'] for r in rows)/len(rows):.1f}"),
+        ("predictor_calibration", predictor_calibration.run,
+         lambda rows: "ema_bias=" + str(predictor_calibration.cell(
+             rows, regime="biased_oracle", calibrate="ema",
+             risk_quantile=None)["pred_bias"])
+         + ";coverage_q0.9=" + str(rows[0].get("coverage_q0.9"))),
         ("multi_node", multi_node.run,
          lambda rows: "hetero_fcfs_lpw_gain_pct=" + "/".join(
              f"{100 * (1 - multi_node.cell(rows, cluster='hetero', ordering='fcfs', n_nodes=n, placement='least_predicted_work', rebalance=False)['jct_mean'] / multi_node.cell(rows, cluster='hetero', ordering='fcfs', n_nodes=n, placement='least_jobs', rebalance=False)['jct_mean']):.1f}"

@@ -13,12 +13,20 @@ from repro.core.load_balancer import (
     PlacementPolicy,
     make_placement,
 )
-from repro.core.metrics import improvement, summarize
+from repro.core.metrics import improvement, prediction_stats, summarize
 from repro.core.predictor import (
     BGEPredictor,
+    CalibrationConfig,
+    ConformalPredictor,
+    EMADebiasedPredictor,
+    LengthPrediction,
+    LengthPredictor,
     NoisyOraclePredictor,
     OraclePredictor,
     PredictorConfig,
+    make_predictor,
+    predict_lengths,
+    wrap_calibration,
 )
 from repro.core.scheduler import (
     PreemptionConfig,
@@ -51,7 +59,10 @@ Executor = Backend
 __all__ = [
     "BGEPredictor",
     "Backend",
+    "CalibrationConfig",
+    "ConformalPredictor",
     "ELISFrontend",
+    "EMADebiasedPredictor",
     "ElisServer",
     "Event",
     "ExecResult",
@@ -60,6 +71,8 @@ __all__ = [
     "GlobalState",
     "Job",
     "JobState",
+    "LengthPrediction",
+    "LengthPredictor",
     "LoadBalancer",
     "NoisyOraclePredictor",
     "OraclePredictor",
@@ -79,6 +92,10 @@ __all__ = [
     "improvement",
     "make_placement",
     "make_policy",
+    "make_predictor",
+    "predict_lengths",
+    "prediction_stats",
     "select_preemptions",
     "summarize",
+    "wrap_calibration",
 ]

@@ -145,6 +145,13 @@ class Response:
     tenant: str = "default"
     #: cross-node migrations while queued (cluster rebalancing)
     n_migrations: int = 0
+    #: mean |predicted - actual| remaining tokens over the request's scored
+    #: windows (None when the policy predicted no lengths or the request
+    #: never finished — aborted lengths are censored)
+    pred_mae: Optional[float] = None
+    #: geometric mean of predicted/actual remaining (1.0 = calibrated,
+    #: < 1 = the predictor underestimated this request)
+    pred_bias: Optional[float] = None
 
     @property
     def n_tokens(self) -> int:
@@ -160,6 +167,9 @@ class Response:
 
     @classmethod
     def from_job(cls, job: Job) -> "Response":
+        from repro.core.metrics import prediction_stats
+
+        mae, bias = prediction_stats(job)
         return cls(
             request_id=job.job_id,
             status=_STATE_TO_STATUS[job.state],
@@ -173,6 +183,8 @@ class Response:
             n_iterations=job.n_iterations,
             tenant=job.tenant,
             n_migrations=job.n_migrations,
+            pred_mae=mae,
+            pred_bias=bias,
         )
 
 

@@ -62,6 +62,7 @@ from repro.core.scheduler import (
     PreemptionConfig,
     SchedulerConfig,
     batch_effective,
+    cached_expected_remaining,
     cached_raw_priority,
     effective_priority,
     make_policy,
@@ -146,6 +147,12 @@ class FrontendConfig:
     rebalance_threshold: float = 200.0
     #: cap on jobs stolen per node_free event
     max_migrations_per_free: int = 4
+    #: feed the predictor ground-truth remaining length on EVERY window
+    #: (``predictor.observe``) — exact in trace replay / simulation, where
+    #: ``true_output_len`` is the realised length.  A live engine only
+    #: learns a request's length at its finish, so the serving launcher
+    #: turns this off and calibration runs on finish observations alone.
+    observe_in_flight: bool = True
 
 
 class ELISFrontend:
@@ -154,6 +161,10 @@ class ELISFrontend:
         self.cfg = cfg
         self.policy = make_policy(cfg.scheduler, predictor)
         self.executor = executor
+        #: online-feedback hook (no-op on raw predictors, residual/bias
+        #: updates on calibration wrappers); None for predictor-less
+        #: policies and legacy predictor objects
+        self._observe = getattr(predictor, "observe", None)
         self.state = GlobalState(cfg.n_nodes)
         self.balancer = LoadBalancer(
             self.state, make_placement(cfg.placement, cfg.node_token_cost))
@@ -308,6 +319,10 @@ class ELISFrontend:
         # everything is terminal)
         self.state.finish_job(node, job.job_id)
         self.terminated.append(job)
+        if self._observe is not None:
+            # notify the calibrator so it drops the job's pending residuals
+            # (CANCELLED/EXPIRED lengths are censored — never learned from)
+            self._observe(job, 0.0)
         out.append(Event(t, state.value, job.job_id))
 
     def _on_arrival(self, job: Job, now: float, out: List[Event]) -> None:
@@ -361,7 +376,11 @@ class ELISFrontend:
         pred = self.policy.predictor
         if pred is None:
             return 0.0
-        return max(float(pred.init(job)), 0.0)
+        from repro.core.predictor import predict_lengths
+
+        # the *expectation* (debiased when a calibration wrapper is
+        # composed in) — work-aware placement balances expected tokens
+        return max(predict_lengths(pred, [job])[0].mean, 0.0)
 
     def _rebalance(self, node: int, now: float, out: List[Event]) -> None:
         """Work-stealing at a ``node_free`` event: while the most-loaded
@@ -475,7 +494,17 @@ class ELISFrontend:
                 self.running[node].remove(job)
                 self.state.finish_job(node, job.job_id)
                 self.executor.evict(node, job)
+                if self._observe is not None:
+                    # finish reveals the exact length: resolve every logged
+                    # prediction into a residual (actual_remaining == 0)
+                    self._observe(job, 0.0)
                 out.append(Event(end, "finished", job.job_id))
+            elif (self._observe is not None and self.cfg.observe_in_flight
+                  and job.true_output_len > 0):
+                # mid-flight ground truth (trace replay / simulation only —
+                # see FrontendConfig.observe_in_flight): calibrators adapt
+                # within a window or two instead of waiting for finishes
+                self._observe(job, float(job.true_remaining))
         self._push_event(end, "node_free", node)
         self.node_busy[node] = True
         if self._rebalance_active and self.waiting[node]:
@@ -507,11 +536,15 @@ class ELISFrontend:
         # (un-banded, un-aged) remaining-length scores this window used —
         # skipped entirely when nothing consumes predicted work (default
         # least_jobs placement without rebalancing keeps PR 2's hot path)
+        # (the *expectation*, not the risk quantile — summing upper
+        # quantiles across a node would systematically over-count its load)
         if self._track_work and self.policy.predicts_length:
             for j in running:
-                self.state.set_work(j.job_id, max(cached_raw_priority(j), 0.0))
+                self.state.set_work(
+                    j.job_id, max(cached_expected_remaining(j), 0.0))
             for j in waiting:
-                self.state.set_work(j.job_id, max(cached_raw_priority(j), 0.0))
+                self.state.set_work(
+                    j.job_id, max(cached_expected_remaining(j), 0.0))
 
         # backend capacity snapshot BEFORE preemption: a swap is net-zero on
         # residency (victim evicted now, replacement occupies the slot at

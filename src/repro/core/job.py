@@ -52,6 +52,16 @@ class Job:
     #: (``SchedulerConfig.repredict_every``) the scheduler reuses
     #: ``priority - (tokens_generated - tokens_at_last_score)``
     tokens_at_last_score: Optional[int] = None
+    #: expected remaining length from the last score.  Equal to ``priority``
+    #: unless risk-aware scoring is on (then ``priority`` is an upper
+    #: quantile); the cluster layer's predicted-work accounting always
+    #: consumes this expectation, never the quantile
+    expected_remaining: Optional[float] = None
+    #: (tokens_generated, expected_remaining) at each scored window — the
+    #: realised-vs-predicted trace behind per-request prediction-error
+    #: stats (``Response.pred_mae`` / ``pred_bias``); only populated by
+    #: length-predicting policies (SJF/ISRTF)
+    pred_trace: List[tuple] = field(default_factory=list)
 
     generated: List[int] = field(default_factory=list)
     finished: bool = False

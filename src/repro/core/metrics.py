@@ -1,11 +1,39 @@
 """JCT / queuing-delay / throughput metrics (paper §6 evaluation)."""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.job import Job
+from repro.core.job import Job, JobState
+
+
+def prediction_stats(job: Job) -> Tuple[Optional[float], Optional[float]]:
+    """Per-request prediction-error stats from the job's scored trace.
+
+    Returns ``(mae, bias)`` over every ``(tokens_at, expected_remaining)``
+    entry the scheduler recorded (``Job.pred_trace``), measured against the
+    realised remaining length at that point — only computable once the job
+    FINISHED (an aborted job's realised length is censored).  ``bias`` is
+    the geometric mean of predicted/actual (1.0 = perfectly calibrated,
+    < 1 = underestimates)."""
+    if job.state is not JobState.FINISHED or not job.pred_trace:
+        return None, None
+    total = job.tokens_generated
+    errs, logr = [], []
+    for g, m in job.pred_trace:
+        actual = total - g
+        # skip degenerate entries on EITHER side: SJF records a floored
+        # 0.0 estimate once a job overruns its arrival prediction, and a
+        # log-ratio against that (~ -19) would collapse the request's
+        # geometric-mean bias to ~0 instead of reflecting the predictor
+        if actual <= 0 or m <= 0:
+            continue
+        errs.append(abs(m - actual))
+        logr.append(np.log(m / actual))
+    if not errs:
+        return None, None
+    return float(np.mean(errs)), float(np.exp(np.mean(logr)))
 
 
 def summarize(jobs: Sequence[Job]) -> Dict[str, float]:
@@ -26,7 +54,7 @@ def summarize(jobs: Sequence[Job]) -> Dict[str, float]:
     makespan = max(j.finish_time for j in jobs) - min(
         j.arrival_time for j in jobs
     )
-    return {
+    out = {
         "n": len(jobs),
         "jct_mean": float(jcts.mean()),
         "jct_p50": float(np.percentile(jcts, 50)),
@@ -44,6 +72,18 @@ def summarize(jobs: Sequence[Job]) -> Dict[str, float]:
             ])
         ),
     }
+    # prediction-error aggregates: present only when the records carry
+    # per-request stats (Response.pred_mae / pred_bias from a
+    # length-predicting policy) — raw Job summaries are unchanged
+    maes = [v for j in jobs if (v := getattr(j, "pred_mae", None)) is not None]
+    biases = [v for j in jobs
+              if (v := getattr(j, "pred_bias", None)) is not None]
+    if maes:
+        out["pred_mae_mean"] = float(np.mean(maes))
+    if biases:
+        # geometric mean composes multiplicative per-request biases
+        out["pred_bias_gmean"] = float(np.exp(np.mean(np.log(biases))))
+    return out
 
 
 def improvement(base: Dict[str, float], new: Dict[str, float],

@@ -1,45 +1,77 @@
-"""Response-length predictors (paper §3.2–3.3, §4.2).
+"""Response-length predictors (paper §3.2–3.3, §4.2) — the distribution-aware
+``LengthPredictor`` subsystem.
 
-Three implementations behind one protocol:
+Every predictor returns typed :class:`LengthPrediction` results (point
+estimate, spread, quantile ladder) from ONE batched entry point::
+
+    predictions = predictor.predict(pool)      # list[LengthPrediction]
+
+and accepts online feedback from the serving loop::
+
+    predictor.observe(job, actual_remaining)   # every window / finish
+
+The legacy scalar protocol (``init(job)`` / ``iter(job)``, Algorithm 1
+lines 11–14) survives as thin deprecation shims on the base class — both
+return ``predict([job])[0].mean`` — so old callers keep working while new
+consumers (risk-aware ISRTF, work-aware placement, calibration benchmarks)
+read the full distribution.
+
+Base predictors:
 
 * :class:`BGEPredictor` — the paper's model: a (frozen) BGE-style encoder +
   8 fully-connected layers (hidden 1024, ReLU) regressing the *remaining*
   output length from ``[CLS] prompt [SEP] partial-output``.  Implemented and
   trained fully in JAX; the encoder can be frozen (paper §3.2) or trained
-  end-to-end (our beyond-paper variant — the synthetic encoder is not
-  pretrained, so unfreezing is what makes it "fine-tuned").
-* :class:`OraclePredictor` — returns the ground-truth remaining length
-  (the paper's SJF "ideal" upper bound).
+  end-to-end.  ``fit`` additionally estimates the log-space residual spread
+  on the training samples, so quantiles are available out of the box.
+* :class:`OraclePredictor` — ground-truth remaining length (degenerate
+  distribution; the paper's SJF "ideal" upper bound).
 * :class:`NoisyOraclePredictor` — truth corrupted by step-dependent
   lognormal noise whose σ decays with the iteration index, calibrated to the
-  paper's Fig. 2(b) MAE-vs-step curve.  Used by the cluster simulator where
-  running the real encoder for every virtual request would dominate runtime.
+  paper's Fig. 2(b) MAE-vs-step curve; its quantile ladder is the analytic
+  lognormal posterior, so risk-aware scoring needs no extra RNG draws.
 
-``Predictor.init(job)`` / ``Predictor.iter(job)`` mirror Algorithm 1
-lines 11–14.  The scheduler's hot path goes through the batched
-``predict_jobs`` instead: one *shape-bucketed* dispatch per scheduling
-window (batch padded to power-of-two buckets, sequence to the
-``seq_bucket`` ladder) so the jitted apply compiles once per bucket —
-``BGEPredictor.num_traces`` exposes the compile count, and
-``num_dispatches`` the dispatch count, for the recompile-storm guard in
-``benchmarks/scheduler_overhead.py``.
+Calibration wrappers (compose over any base via :func:`make_predictor`):
+
+* :class:`EMADebiasedPredictor` — tracks the multiplicative bias
+  ``predicted / actual`` (optionally per iteration step, Fig. 2(b) says the
+  error profile is step-dependent) as an EMA of log-ratios and divides it
+  back out of every prediction.
+* :class:`ConformalPredictor` — distribution-free quantiles from a rolling
+  window of multiplicative residuals (split-conformal with the finite-sample
+  ``ceil((n+1)q)/n`` correction), optionally Mondrian-bucketed by step.
+
+The scheduler's hot path stays a single *shape-bucketed* dispatch per
+scheduling window (batch padded to power-of-two buckets, sequence to the
+``seq_bucket`` ladder); ``BGEPredictor.num_traces`` exposes the compile
+count and ``num_dispatches`` the dispatch count for the recompile-storm
+guard in ``benchmarks/scheduler_overhead.py``.
 """
 from __future__ import annotations
 
 import math
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Protocol, Sequence
+from typing import (
+    Deque,
+    Dict,
+    List,
+    Optional,
+    Protocol,
+    Sequence,
+    Tuple,
+    Union,
+)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.job import Job
+from repro.core.job import TERMINAL_STATES, Job, JobState
 from repro.data.dataset import (
     WINDOW,
     StepSample,
     batch_bucket,
-    pad_batch,
     seq_bucket,
 )
 from repro.data.tokenizer import CLS_ID, SEP_ID
@@ -49,8 +81,182 @@ from repro.training import AdamWConfig, train
 
 
 class Predictor(Protocol):
+    """Deprecated scalar protocol (pre-LengthPredictor).  New code should
+    type against :class:`LengthPredictor` and call ``predict``/``observe``;
+    these two methods remain only so old annotations keep resolving."""
+
     def init(self, job: Job) -> float: ...
     def iter(self, job: Job) -> float: ...
+
+
+# --------------------------------------------------------------------------- #
+# LengthPrediction — the typed result
+# --------------------------------------------------------------------------- #
+
+
+#: quantile ladder every distribution-aware predictor materialises; the
+#: scheduler interpolates between rungs for other risk levels
+QUANTILE_GRID: Tuple[float, ...] = (0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 0.99)
+
+
+def _norm_ppf(q: float) -> float:
+    """Standard-normal inverse CDF (Acklam's rational approximation,
+    |rel err| < 1.2e-9 — plenty for risk quantiles; avoids a scipy dep)."""
+    if not 0.0 < q < 1.0:
+        raise ValueError(f"quantile must be in (0, 1), got {q}")
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    plow = 0.02425
+    if q < plow:
+        u = math.sqrt(-2.0 * math.log(q))
+        return (((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4]) * u
+                + c[5]) / ((((d[0] * u + d[1]) * u + d[2]) * u + d[3]) * u + 1)
+    if q > 1 - plow:
+        u = math.sqrt(-2.0 * math.log(1 - q))
+        return -(((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4]) * u
+                 + c[5]) / ((((d[0] * u + d[1]) * u + d[2]) * u + d[3]) * u + 1)
+    u = q - 0.5
+    r = u * u
+    return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r
+            + a[5]) * u / (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r
+                            + b[4]) * r + 1)
+
+
+#: z-values for the grid, computed once — ladder construction sits on the
+#: scheduling hot path (every scored job, every window)
+_Z_GRID: Tuple[float, ...] = tuple(_norm_ppf(q) for q in QUANTILE_GRID)
+
+
+def _lognormal_ladder(mean: float, mu: float,
+                      s: float) -> Tuple[Tuple[float, float], ...]:
+    """Quantile ladder of ``mean * LogNormal(mu, s)`` on the grid."""
+    return tuple((q, mean * math.exp(mu + s * z))
+                 for q, z in zip(QUANTILE_GRID, _Z_GRID))
+
+
+@dataclass(frozen=True)
+class LengthPrediction:
+    """One job's predicted remaining length, as a distribution.
+
+    ``mean`` is the point estimate every legacy consumer ranked on (for a
+    stochastic predictor it is the *draw*, not the posterior mean — trace
+    compatibility with the scalar API is exact).  ``quantiles`` is a sorted
+    ``(q, value)`` ladder; :meth:`quantile` interpolates between rungs and
+    falls back to a normal approximation from ``std`` (degenerate at the
+    mean when ``std == 0``).
+    """
+
+    mean: float
+    std: float = 0.0
+    quantiles: Tuple[Tuple[float, float], ...] = ()
+
+    def quantile(self, q: float) -> float:
+        """The q-th quantile of the predicted remaining length."""
+        if not 0.0 < q < 1.0:
+            raise ValueError(f"quantile must be in (0, 1), got {q}")
+        lad = self.quantiles
+        if lad:
+            if q <= lad[0][0]:
+                return lad[0][1]
+            for (q0, v0), (q1, v1) in zip(lad, lad[1:]):
+                if q <= q1:
+                    w = (q - q0) / (q1 - q0)
+                    return v0 + w * (v1 - v0)
+            return lad[-1][1]
+        if self.std > 0.0:
+            return max(self.mean + _norm_ppf(q) * self.std, 0.0)
+        return self.mean
+
+
+# --------------------------------------------------------------------------- #
+# LengthPredictor — the base class
+# --------------------------------------------------------------------------- #
+
+
+class LengthPredictor:
+    """Distribution-aware predictor base.
+
+    Subclasses implement EITHER ``predict_jobs(jobs) -> array`` (one batched
+    dispatch of point estimates — the BGE path) OR ``_point(job) -> float``
+    (per-job point estimate, e.g. the oracles), plus optionally
+    ``_prediction(job, mean)`` to attach spread/quantiles.  ``observe`` is a
+    no-op here; calibration wrappers override it to consume feedback.
+
+    ``init``/``iter`` are the deprecated scalar shims (Algorithm 1's
+    surface): both return ``predict([job])[0].mean``.
+    """
+
+    def predict(self, jobs: Sequence[Job]) -> List[LengthPrediction]:
+        """Batched prediction for a scheduling pool — ONE dispatch when the
+        underlying model supports it.  For stochastic predictors the draw
+        order is the pool order (scoring order), which keeps drain-once
+        traces bit-identical to the legacy per-job ``init``/``iter`` path."""
+        jobs = list(jobs)
+        if not jobs:
+            return []
+        pj = getattr(self, "predict_jobs", None)
+        if pj is not None:
+            means = [float(m) for m in pj(jobs)]
+        else:
+            means = [float(self._point(j)) for j in jobs]
+        return [self._prediction(j, m) for j, m in zip(jobs, means)]
+
+    def observe(self, job: Job, actual_remaining: float) -> None:
+        """Online feedback: ``job`` has ``actual_remaining`` ground-truth
+        tokens left *now*.  The serving loop calls this on every window where
+        truth is known (trace replay / simulation), on every FINISH
+        (``actual_remaining == 0``), and on CANCELLED/EXPIRED terminations
+        (whose censored lengths calibrators must discard).  No-op for raw
+        predictors."""
+
+    # -- helpers subclasses provide ------------------------------------- #
+    def _point(self, job: Job) -> float:  # pragma: no cover - abstract-ish
+        raise NotImplementedError(
+            f"{type(self).__name__} must implement _point or predict_jobs")
+
+    def _prediction(self, job: Job, mean: float) -> LengthPrediction:
+        return LengthPrediction(mean=mean)
+
+    # -- deprecated scalar shims ---------------------------------------- #
+    def init(self, job: Job) -> float:
+        """Deprecated: use ``predict([job])[0]``."""
+        return self.predict([job])[0].mean
+
+    def iter(self, job: Job) -> float:
+        """Deprecated: use ``predict([job])[0]``."""
+        return self.predict([job])[0].mean
+
+
+def predict_lengths(pred, jobs: Sequence[Job]) -> List[LengthPrediction]:
+    """Adapt any predictor — new or legacy — to ``list[LengthPrediction]``.
+
+    The scheduler's single entry point: a :class:`LengthPredictor` answers
+    through its batched ``predict``; a legacy object with only
+    ``predict_jobs`` or ``init``/``iter`` is wrapped into degenerate
+    point-mass predictions (same call order as the old scoring loop)."""
+    jobs = list(jobs)
+    if not jobs:
+        return []
+    p = getattr(pred, "predict", None)
+    if p is not None:
+        return list(p(jobs))
+    pj = getattr(pred, "predict_jobs", None)
+    if pj is not None:
+        return [LengthPrediction(mean=float(m)) for m in pj(jobs)]
+    out = []
+    for j in jobs:
+        v = pred.init(j) if j.priority is None else pred.iter(j)
+        out.append(LengthPrediction(mean=float(v)))
+    return out
 
 
 # --------------------------------------------------------------------------- #
@@ -58,23 +264,27 @@ class Predictor(Protocol):
 # --------------------------------------------------------------------------- #
 
 
-class OraclePredictor:
+class OraclePredictor(LengthPredictor):
     """Ground-truth remaining length (the SJF 'ideal' bound)."""
 
-    def init(self, job: Job) -> float:
-        return float(job.true_remaining)
-
-    def iter(self, job: Job) -> float:
+    def _point(self, job: Job) -> float:
         return float(job.true_remaining)
 
 
 @dataclass
-class NoisyOraclePredictor:
-    """truth * lognormal(0, sigma_k);  sigma_k = sigma0 * decay^k.
+class NoisyOraclePredictor(LengthPredictor):
+    """truth * lognormal(0, sigma_k) * bias;  sigma_k = sigma0 * decay^k.
 
     Defaults calibrated against our trained BGE predictor's per-step relative
     error (see benchmarks/fig2_iterative_mae.py): step-0 MAE/mean ≈ 0.45
     falling toward ≈ 0.25 by step 4 — matching the paper's Fig. 2(b) shape.
+
+    ``bias`` injects a systematic multiplicative mis-calibration (< 1 =
+    underestimates, the head-of-line-blocking direction) for the calibration
+    benchmarks; the default 1.0 is bit-exact with the unbiased predictor.
+    The quantile ladder is the analytic posterior of the truth given the
+    draw (lognormal), so risk-aware consumers cost no extra RNG draws and
+    the draw sequence — one per job, in scoring order — is untouched.
     """
 
     # calibrated to the trained BGE predictor's relative error per step
@@ -83,6 +293,8 @@ class NoisyOraclePredictor:
     decay: float = 0.90
     sigma_floor: float = 0.30
     seed: int = 0
+    #: systematic multiplicative bias applied to every prediction
+    bias: float = 1.0
     _rng: np.random.RandomState = field(default=None, repr=False)
 
     def __post_init__(self):
@@ -91,14 +303,21 @@ class NoisyOraclePredictor:
     def _sigma(self, step: int) -> float:
         return max(self.sigma0 * self.decay ** step, self.sigma_floor)
 
-    def _predict(self, job: Job) -> float:
+    def _point(self, job: Job) -> float:
         step = job.tokens_generated // WINDOW
         s = self._sigma(step)
         noise = self._rng.lognormal(mean=-0.5 * s * s, sigma=s)
-        return max(float(job.true_remaining) * noise, 1.0)
+        return max(float(job.true_remaining) * noise * self.bias, 1.0)
 
-    init = _predict
-    iter = _predict
+    def _prediction(self, job: Job, mean: float) -> LengthPrediction:
+        # posterior of truth given the draw m = truth * noise:
+        # truth = m / noise ~ m * LogNormal(s^2/2, s), so the q-quantile is
+        # m * exp(s^2/2 + s * z_q) and the std carries the full
+        # exp(mu + s^2/2) = exp(s^2) factor
+        s = self._sigma(job.tokens_generated // WINDOW)
+        ladder = _lognormal_ladder(mean, 0.5 * s * s, s)
+        std = mean * math.exp(s * s) * math.sqrt(max(math.expm1(s * s), 0.0))
+        return LengthPrediction(mean=mean, std=std, quantiles=ladder)
 
 
 # --------------------------------------------------------------------------- #
@@ -108,7 +327,11 @@ class NoisyOraclePredictor:
 
 @dataclass(frozen=True)
 class PredictorConfig:
-    encoder: E.EncoderArchConfig = E.EncoderArchConfig()
+    # default_factory, not a shared class-level instance: EncoderArchConfig
+    # is frozen today, but a shared default is the same hazard class as the
+    # EngineConfig() bug PR 1 fixed — every PredictorConfig() would alias
+    # one object, and any future mutable field on it would couple them all
+    encoder: E.EncoderArchConfig = field(default_factory=E.EncoderArchConfig)
     n_fc_layers: int = 8           # paper: eight FC layers
     fc_hidden: int = 1024          # paper: hidden dim 1024
     max_len: int = 256
@@ -142,11 +365,22 @@ def apply_head(head: Dict, x: jnp.ndarray) -> jnp.ndarray:
     return (x @ last["w"] + last["b"])[..., 0]
 
 
-class BGEPredictor:
-    """Encoder + FC-head length regressor with iterative refinement."""
+class BGEPredictor(LengthPredictor):
+    """Encoder + FC-head length regressor with iterative refinement.
 
-    def __init__(self, cfg: PredictorConfig = PredictorConfig(), seed: int = 0):
-        self.cfg = cfg
+    ``fit`` additionally estimates the model's log-space residual
+    distribution (mean + spread of ``log(actual / predicted)``) on the
+    training samples, which :meth:`_prediction` turns into a lognormal
+    quantile ladder — so a freshly trained predictor supports risk-aware
+    scoring without any serving-time feedback.  The ``mean`` stays the raw
+    point estimate (quantiles are only consumed when a risk level is set),
+    so legacy traces are unchanged.
+    """
+
+    def __init__(self, cfg: Optional[PredictorConfig] = None, seed: int = 0):
+        # None-default: a shared PredictorConfig() instance as the default
+        # argument would alias one config object across every predictor
+        self.cfg = cfg = cfg if cfg is not None else PredictorConfig()
         key = jax.random.PRNGKey(seed)
         k1, k2 = jax.random.split(key)
         self.params = {
@@ -158,6 +392,13 @@ class BGEPredictor:
         }
         self._n_traces = 0
         self.num_dispatches = 0
+        #: log-space residual stats from ``fit`` (0, 0 = unknown spread)
+        self.resid_mu = 0.0
+        self.resid_sigma = 0.0
+        #: per-iteration-step residual stats (Fig. 2(b): the error profile
+        #: is step-dependent — fresh predictions are much noisier than deep
+        #: ones, so upper quantiles hedge them harder): step -> (mu, sigma)
+        self.resid_by_step: Dict[int, Tuple[float, float]] = {}
         self._apply = jax.jit(self._apply_fn)
 
     @property
@@ -168,7 +409,7 @@ class BGEPredictor:
         and reset whenever ``fit`` re-jits the apply, so for a predictor
         doing serving-path inference it stays <= the number of shape
         buckets no matter how the scheduling pool grows.  ``evaluate``
-        drives its own (unbucketed) chunk shapes and adds their traces."""
+        drives its own chunked-but-bucketed shapes and adds their traces."""
         return self._n_traces
 
     # -------------------------------------------------------------- #
@@ -214,17 +455,22 @@ class BGEPredictor:
         return clip_step_input(job.prompt_tokens, job.generated,
                                self.cfg.max_len)
 
-    def init(self, job: Job) -> float:
-        return float(self.predict_tokens([self._job_input(job)])[0])
-
-    def iter(self, job: Job) -> float:
-        return float(self.predict_tokens([self._job_input(job)])[0])
-
     def predict_jobs(self, jobs: Sequence[Job]) -> np.ndarray:
-        """Batched prediction for a whole pool (one encoder call)."""
+        """Batched point prediction for a whole pool (one encoder call)."""
         if not jobs:
             return np.zeros((0,))
         return self.predict_tokens([self._job_input(j) for j in jobs])
+
+    def _prediction(self, job: Job, mean: float) -> LengthPrediction:
+        if self.resid_sigma <= 0.0:
+            return LengthPrediction(mean=mean)
+        step = job.tokens_generated // WINDOW
+        key = min(step, max(self.resid_by_step, default=0))
+        mu, s = self.resid_by_step.get(key, (self.resid_mu, self.resid_sigma))
+        ladder = _lognormal_ladder(mean, mu, s)
+        std = mean * math.exp(mu + 0.5 * s * s) * math.sqrt(
+            max(math.expm1(s * s), 0.0))
+        return LengthPrediction(mean=mean, std=std, quantiles=ladder)
 
     # -------------------------------------------------------------- #
     def loss_fn(self, params, batch):
@@ -261,27 +507,79 @@ class BGEPredictor:
             log_fn=log_fn,
         )
         self._apply = jax.jit(self._apply_fn)
+        self._fit_residuals(train_samples)
         # fresh jit cache -> fresh compile count (training traced
-        # _apply_fn under its own jit; those compiles are gone now)
+        # _apply_fn under its own jit; those compiles are gone now, and the
+        # residual-estimation chunks above drove their own shapes)
         self._n_traces = 0
         return history
 
+    def _fit_residuals(self, samples: Sequence[StepSample],
+                       cap: int = 512, min_per_step: int = 16) -> None:
+        """Estimate the log-space residual distribution log(actual/pred) on
+        (a slice of) the training samples — the quantile-ladder prior.
+
+        Both pooled (``resid_mu``/``resid_sigma``) and per iteration step
+        (``resid_by_step``, Fig. 2(b)): early-step predictions carry much
+        wider residuals than deep ones, so a risk quantile built from the
+        per-step spread hedges fresh, uncertain jobs harder than confident
+        deep ones — which is what actually re-orders a pool."""
+        sub = list(samples[:cap])
+        if len(sub) < 8:
+            return
+        pred = self._predict_samples(sub)
+        y = np.array([max(s.remaining, 1) for s in sub], np.float64)
+        logr = np.log(y) - np.log(np.maximum(pred, 1e-6))
+        self.resid_mu = float(np.mean(logr))
+        self.resid_sigma = float(np.std(logr))
+        self.resid_by_step = {}
+        steps = np.array([s.step for s in sub])
+        for k in sorted(set(int(s) for s in steps)):
+            r = logr[steps == k]
+            if len(r) >= min_per_step:
+                self.resid_by_step[k] = (float(np.mean(r)),
+                                         float(np.std(r)))
+
+    def _predict_samples(self, samples: Sequence[StepSample],
+                         chunk: int = 256) -> np.ndarray:
+        """Chunked, bucket-padded inference over pre-built StepSamples.
+
+        Pads PER CHUNK (batch dimension to the power-of-two bucket, sequence
+        to the configured ``max_len``) instead of materialising one giant
+        padded array for the whole sample list — evaluating a large trace
+        set stays O(chunk) memory and compiles at most one shape per batch
+        bucket."""
+        from repro.data.tokenizer import PAD_ID
+
+        ml = self.cfg.max_len
+        preds = []
+        for i in range(0, len(samples), chunk):
+            part = samples[i: i + chunk]
+            bb = batch_bucket(len(part))
+            # same pad convention as training's pad_batch (PAD_ID, masked)
+            toks = np.full((bb, ml), PAD_ID, np.int32)
+            msk = np.zeros((bb, ml), bool)
+            for r, s in enumerate(part):
+                t = s.tokens[:ml]
+                toks[r, : len(t)] = t
+                msk[r, : len(t)] = True
+            preds.append(
+                np.asarray(self._apply(self.params, toks, msk))[: len(part)])
+        return np.concatenate(preds) if preds else np.zeros((0,))
+
     # -------------------------------------------------------------- #
     def evaluate(self, samples: List[StepSample]) -> Dict[str, float]:
-        """MAE / RMSE / R² — the paper's Table 2 metrics."""
+        """MAE / RMSE / R² — the paper's Table 2 metrics.
+
+        Pads per 256-row chunk (see :meth:`_predict_samples`) rather than
+        one ``pad_batch`` over the whole list: a 100k-sample trace set no
+        longer materialises a (100k, max_len) array up front, and the
+        chunked shapes stay on the batch-bucket ladder so traces are
+        bounded."""
         if not samples:
             return {"mae": float("nan"), "rmse": float("nan"), "r2": float("nan")}
-        batch = pad_batch(samples, self.cfg.max_len)
-        preds = []
-        for i in range(0, len(samples), 256):
-            preds.append(
-                np.asarray(
-                    self._apply(self.params, batch["tokens"][i : i + 256],
-                                batch["mask"][i : i + 256])
-                )
-            )
-        pred = np.concatenate(preds)
-        y = batch["labels"][: len(pred)]
+        pred = self._predict_samples(samples)
+        y = np.array([s.remaining for s in samples], np.float32)
         mae = float(np.mean(np.abs(pred - y)))
         rmse = float(np.sqrt(np.mean((pred - y) ** 2)))
         ss_res = float(np.sum((pred - y) ** 2))
@@ -298,3 +596,327 @@ class BGEPredictor:
             if len(sub) >= 5:
                 out[k] = self.evaluate(sub)["mae"]
         return out
+
+
+# --------------------------------------------------------------------------- #
+# Calibration wrappers (online feedback consumers)
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class CalibrationConfig:
+    """How a base predictor is wrapped for serving-time calibration."""
+
+    #: EMA multiplicative debiasing (EMADebiasedPredictor)
+    debias: bool = False
+    #: EMA weight for the log-bias estimate
+    ema_alpha: float = 0.1
+    #: distribution-free quantiles from rolling residuals (ConformalPredictor)
+    conformal: bool = False
+    #: rolling residual-window size (per step bucket when ``by_step``)
+    window: int = 256
+    #: residuals required before a wrapper's estimate is trusted
+    min_samples: int = 16
+    #: Mondrian bucketing: estimate per iteration step (Fig. 2(b): the error
+    #: profile is step-dependent), falling back to the pooled estimate while
+    #: a step's bucket is cold
+    by_step: bool = True
+    #: steps >= this share one bucket
+    max_step_bucket: int = 6
+
+    @classmethod
+    def from_name(cls, name: str, **kw) -> "CalibrationConfig":
+        """``none | ema | conformal | ema+conformal`` -> config."""
+        parts = {p for p in name.replace(" ", "").split("+") if p}
+        known = {"none", "ema", "conformal"}
+        if not parts or not parts <= known:
+            raise ValueError(
+                f"unknown calibration {name!r} (combine {sorted(known)})")
+        return cls(debias="ema" in parts, conformal="conformal" in parts, **kw)
+
+
+class CalibratedPredictor(LengthPredictor):
+    """Base for calibration wrappers: composes over any base predictor,
+    logs every prediction it hands out, and resolves those logs into
+    residuals when :meth:`observe` reveals the ground truth.
+
+    A logged entry is ``(tokens_generated_at_prediction, reference_mean)``;
+    on an observation with ``actual_remaining`` known *now*, the actual
+    remaining length at each logged point is
+    ``(tokens_generated_now + actual_remaining) - tokens_at_prediction`` —
+    exact both for mid-flight oracle feedback (simulation/replay) and for
+    the finish-only feedback a live engine can provide.  CANCELLED/EXPIRED
+    jobs are censored (they would have generated more); their logs are
+    dropped without touching the estimate, so aborted requests never poison
+    the residual window."""
+
+    #: logged-but-unresolved predictions kept per job (oldest dropped)
+    MAX_PENDING_PER_JOB = 64
+    #: jobs tracked at once (serving cleans up via terminal observes; this
+    #: bounds standalone/benchmark usage that never calls observe)
+    MAX_PENDING_JOBS = 4096
+
+    def __init__(self, base):
+        self.base = base
+        self._pending: "OrderedDict[int, List[Tuple[int, float]]]" = \
+            OrderedDict()
+        #: resolved residuals consumed so far
+        self.n_observed = 0
+
+    # -- step bucketing ------------------------------------------------- #
+    def _bucket(self, tokens_generated: int) -> int:
+        cfg = self.cfg
+        if not cfg.by_step:
+            return 0
+        return min(tokens_generated // WINDOW, cfg.max_step_bucket)
+
+    # -- prediction path ------------------------------------------------ #
+    def predict(self, jobs: Sequence[Job]) -> List[LengthPrediction]:
+        jobs = list(jobs)
+        if not jobs:
+            return []
+        base_preds = self.base.predict(jobs)
+        out = [self._adjust(j, p) for j, p in zip(jobs, base_preds)]
+        for j, bp, ap in zip(jobs, base_preds, out):
+            self._log(j, self._reference_mean(bp, ap))
+        return out
+
+    def _log(self, job: Job, ref_mean: float) -> None:
+        entries = self._pending.setdefault(job.job_id, [])
+        self._pending.move_to_end(job.job_id)
+        entries.append((job.tokens_generated, ref_mean))
+        if len(entries) > self.MAX_PENDING_PER_JOB:
+            del entries[0]
+        while len(self._pending) > self.MAX_PENDING_JOBS:
+            self._pending.popitem(last=False)
+
+    # -- feedback path --------------------------------------------------- #
+    def observe(self, job: Job, actual_remaining: float) -> None:
+        self.base.observe(job, actual_remaining)
+        jid = job.job_id
+        if job.state in (JobState.CANCELLED, JobState.EXPIRED):
+            # censored: the request was aborted, its realised length says
+            # nothing about what the model would have generated
+            self._pending.pop(jid, None)
+            return
+        entries = self._pending.get(jid)
+        if entries:
+            total = job.tokens_generated + max(float(actual_remaining), 0.0)
+            for g, ref in entries:
+                actual = total - g
+                if actual > 0.0 and ref > 0.0:
+                    self._update(self._bucket(g), ref, actual)
+                    self.n_observed += 1
+            entries.clear()
+        if job.state in TERMINAL_STATES:
+            self._pending.pop(jid, None)
+
+    # -- wrapper-specific hooks ------------------------------------------ #
+    def _adjust(self, job: Job,
+                pred: LengthPrediction) -> LengthPrediction:
+        raise NotImplementedError
+
+    def _reference_mean(self, base_pred: LengthPrediction,
+                        adjusted: LengthPrediction) -> float:
+        """Which mean the residual is measured against."""
+        raise NotImplementedError
+
+    def _update(self, bucket: int, predicted: float, actual: float) -> None:
+        raise NotImplementedError
+
+
+class EMADebiasedPredictor(CalibratedPredictor):
+    """Multiplicative-bias correction from online feedback.
+
+    Tracks ``log(predicted / actual)`` of the BASE predictor as an EMA —
+    per iteration-step bucket when ``cfg.by_step`` (an undertrained
+    regressor's bias is strongly step-dependent: early-step predictions
+    regress to the corpus mean) — and divides the estimated bias back out
+    of every prediction (mean, std, and quantile ladder all scale).  Under
+    a constantly biased base (pred = b * truth) the correction converges to
+    1/b, driving the served multiplicative bias to 1."""
+
+    def __init__(self, base, cfg: Optional[CalibrationConfig] = None):
+        super().__init__(base)
+        self.cfg = cfg if cfg is not None else CalibrationConfig(debias=True)
+        n = (self.cfg.max_step_bucket + 1) if self.cfg.by_step else 1
+        self._log_bias = [0.0] * n
+        self._counts = [0] * n
+
+    def bias(self, bucket: int = 0) -> float:
+        """Current multiplicative bias estimate (predicted/actual)."""
+        return math.exp(self._log_bias[bucket])
+
+    def _correction(self, bucket: int) -> float:
+        if self._counts[bucket] >= self.cfg.min_samples:
+            return math.exp(-self._log_bias[bucket])
+        # cold bucket: fall back to the pooled estimate across warm buckets
+        warm = [(c, lb) for c, lb in zip(self._counts, self._log_bias)
+                if c >= self.cfg.min_samples]
+        if warm:
+            tot = sum(c for c, _ in warm)
+            return math.exp(-sum(c * lb for c, lb in warm) / tot)
+        return 1.0
+
+    def _adjust(self, job: Job,
+                pred: LengthPrediction) -> LengthPrediction:
+        f = self._correction(self._bucket(job.tokens_generated))
+        if f == 1.0:
+            return pred
+        return LengthPrediction(
+            mean=pred.mean * f, std=pred.std * f,
+            quantiles=tuple((q, v * f) for q, v in pred.quantiles),
+        )
+
+    def _reference_mean(self, base_pred: LengthPrediction,
+                        adjusted: LengthPrediction) -> float:
+        return base_pred.mean  # the bias being estimated is the base's
+
+    def _update(self, bucket: int, predicted: float, actual: float) -> None:
+        x = math.log(max(predicted, 1e-6) / max(actual, 1e-6))
+        a = self.cfg.ema_alpha
+        if self._counts[bucket] == 0:
+            self._log_bias[bucket] = x
+        else:
+            self._log_bias[bucket] += a * (x - self._log_bias[bucket])
+        self._counts[bucket] += 1
+
+
+class ConformalPredictor(CalibratedPredictor):
+    """Distribution-free quantiles from a rolling residual window.
+
+    Keeps the last ``cfg.window`` multiplicative residuals
+    ``actual / predicted`` (per step bucket when ``cfg.by_step`` — Mondrian
+    conformal, better conditional coverage when the error profile is
+    step-dependent) and replaces the base's quantile ladder with
+
+        quantile(q) = mean * Q_q({actual_i / predicted_i})
+
+    using the split-conformal finite-sample correction
+    ``ceil((n+1) q) / n``: on exchangeable residuals the q-quantile upper
+    bound covers the realised length with probability >= q.  The point
+    estimate (``mean``) passes through untouched, so conformal wrapping
+    changes nothing until a risk level is actually consumed."""
+
+    def __init__(self, base, cfg: Optional[CalibrationConfig] = None):
+        super().__init__(base)
+        self.cfg = cfg if cfg is not None else CalibrationConfig(conformal=True)
+        n = (self.cfg.max_step_bucket + 1) if self.cfg.by_step else 1
+        self._scores: List[Deque[float]] = [deque(maxlen=self.cfg.window)
+                                            for _ in range(n)]
+        #: sorted-window memo: bucket -> (version-at-sort, sorted scores);
+        #: sorting sits on the scheduling hot path (every scored job) and
+        #: the window only changes when a residual lands, not per quantile
+        self._version = 0
+        self._sorted: Dict[int, Tuple[int, Optional[np.ndarray]]] = {}
+
+    def _window(self, bucket: int) -> Optional[np.ndarray]:
+        hit = self._sorted.get(bucket)
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        s = self._scores[bucket]
+        if len(s) < self.cfg.min_samples:
+            # cold bucket: pool every bucket's residuals
+            pooled = [x for d in self._scores for x in d]
+            out = (np.sort(np.asarray(pooled))
+                   if len(pooled) >= self.cfg.min_samples else None)
+        else:
+            out = np.sort(np.asarray(s))
+        self._sorted[bucket] = (self._version, out)
+        return out
+
+    @staticmethod
+    def _rung(s: np.ndarray, q: float) -> float:
+        n = len(s)
+        k = min(int(math.ceil((n + 1) * q)), n)
+        return float(s[k - 1])
+
+    def ratio_quantile(self, q: float, bucket: int = 0) -> Optional[float]:
+        """Finite-sample-corrected empirical quantile of the residual
+        ratios, or None while the window is cold."""
+        s = self._window(bucket)
+        if s is None:
+            return None
+        return self._rung(s, q)
+
+    def _adjust(self, job: Job,
+                pred: LengthPrediction) -> LengthPrediction:
+        bucket = self._bucket(job.tokens_generated)
+        s = self._window(bucket)
+        if s is None:
+            return pred
+        ladder = tuple((q, pred.mean * self._rung(s, q))
+                       for q in QUANTILE_GRID)
+        return LengthPrediction(mean=pred.mean, std=pred.std,
+                                quantiles=ladder)
+
+    def _reference_mean(self, base_pred: LengthPrediction,
+                        adjusted: LengthPrediction) -> float:
+        return adjusted.mean  # score the mean actually served (post-debias)
+
+    def _update(self, bucket: int, predicted: float, actual: float) -> None:
+        self._scores[bucket].append(actual / max(predicted, 1e-6))
+        self._version += 1  # invalidate every memoised sorted window
+
+
+# --------------------------------------------------------------------------- #
+# Registry
+# --------------------------------------------------------------------------- #
+
+
+def _make_oracle(seed: int, bias: float, bge):
+    return OraclePredictor()
+
+
+def _make_noisy(seed: int, bias: float, bge):
+    return NoisyOraclePredictor(seed=seed, bias=bias)
+
+
+def _make_bge(seed: int, bias: float, bge):
+    if bge is None:
+        raise ValueError("pass a trained BGEPredictor via bge=")
+    return bge
+
+
+#: base-predictor registry: name -> factory(seed, bias, bge)
+BASE_PREDICTORS = {
+    "oracle": _make_oracle,
+    "noisy_oracle": _make_noisy,
+    "bge": _make_bge,
+}
+
+
+def wrap_calibration(base, calibration: Union[None, str, CalibrationConfig]):
+    """Compose calibration wrappers over ``base``: EMA debias innermost
+    (fixes the point estimate), conformal outermost (its residual window
+    then scores the debiased mean it actually serves)."""
+    if calibration is None:
+        return base
+    if isinstance(calibration, str):
+        calibration = CalibrationConfig.from_name(calibration)
+    pred = base
+    if calibration.debias:
+        pred = EMADebiasedPredictor(pred, calibration)
+    if calibration.conformal:
+        pred = ConformalPredictor(pred, calibration)
+    return pred
+
+
+def make_predictor(kind: str = "noisy_oracle", *, seed: int = 0, bge=None,
+                   calibration: Union[None, str, CalibrationConfig] = None,
+                   bias: float = 1.0):
+    """Build a (possibly calibrated) predictor from the registry.
+
+    ``kind`` selects the base (``oracle | noisy_oracle | bge | none``);
+    ``calibration`` is a :class:`CalibrationConfig`, a name like
+    ``"ema+conformal"``, or None; ``bias`` injects a synthetic
+    multiplicative mis-calibration into the noisy oracle (benchmarks)."""
+    if kind == "none":
+        return None
+    try:
+        factory = BASE_PREDICTORS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown predictor {kind!r} "
+            f"(have {sorted(BASE_PREDICTORS)} + 'none')") from None
+    return wrap_calibration(factory(seed, bias, bge), calibration)

@@ -3,7 +3,12 @@ contribution), and MLFQ (FastServe-style, for comparison).
 
 A policy assigns each job a *priority* — smaller runs earlier.  ISRTF
 re-predicts the remaining length every scheduling iteration (Algorithm 1
-lines 11–14): ``Predictor.init`` on first sight, ``Predictor.iter`` after.
+lines 11–14) through the distribution-aware
+:func:`repro.core.predictor.predict_lengths` entry point; with
+``SchedulerConfig.risk_quantile`` set it ranks on a calibrated upper
+quantile of each :class:`~repro.core.predictor.LengthPrediction` instead
+of the point estimate (risk-aware ISRTF — hedging against underestimates,
+the head-of-line-blocking direction).
 
 This module owns the whole scoring pipeline:
 
@@ -29,7 +34,11 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.job import Job
-from repro.core.predictor import Predictor
+from repro.core.predictor import (
+    LengthPrediction,
+    Predictor,
+    predict_lengths,
+)
 
 
 @dataclass
@@ -43,6 +52,16 @@ class SchedulerConfig:
     aging_rate: float = 0.0
     #: MLFQ quantum boundaries in generated tokens
     mlfq_levels: Tuple[int, ...] = (50, 200, 800)
+    #: risk-aware ISRTF: rank on this calibrated upper quantile of the
+    #: predicted remaining length instead of the point estimate — hedging
+    #: against underestimates, which are the expensive direction (a long
+    #: job predicted short runs early and head-of-line-blocks the truly
+    #: short ones).  None = the paper's Algorithm 1 (rank on the mean);
+    #: bit-identical traces to the scalar-predictor era.  Only policies
+    #: that re-predict (ISRTF) consume it; the cluster layer's
+    #: predicted-work accounting always uses the expectation, never the
+    #: quantile (see ``cached_expected_remaining``).
+    risk_quantile: Optional[float] = None
     #: run the length predictor every N scheduling windows (per node); in
     #: between, a job's cached prediction is decayed by the tokens it has
     #: generated since it was scored (ALISE-style staleness).  1 = the
@@ -160,22 +179,38 @@ def effective_priority(cfg: SchedulerConfig, job: Job, raw: float,
 
 def score_jobs(policy: Policy, jobs: Sequence[Job], now: float) -> List[float]:
     """Fresh raw priorities for ``jobs`` — at most ONE predictor dispatch
-    (batched through ``predict_jobs`` when the predictor supports it).
-    Records each score on the job: ``priority``, the ``predictions``
-    history (one entry per scored window), and the staleness watermark
-    ``tokens_at_last_score``."""
+    (batched through :func:`~repro.core.predictor.predict_lengths`, the
+    distribution-aware entry point).  A re-predicting policy ranks on the
+    point estimate, or — with ``SchedulerConfig.risk_quantile`` set — on
+    that calibrated upper quantile of each :class:`LengthPrediction`.
+
+    Records each score on the job: ``priority`` (the value ranked on), the
+    ``predictions`` history (one entry per scored window), the staleness
+    watermark ``tokens_at_last_score``, and — for length-predicting
+    policies — ``expected_remaining`` (always the expectation, which is
+    what the cluster layer's predicted-work accounting consumes) plus the
+    ``pred_trace`` used for per-request prediction-error stats."""
     if not jobs:
         return []
     pred = policy.predictor
-    if (policy.repredicts and pred is not None
-            and hasattr(pred, "predict_jobs")):
-        raw = [float(r) for r in pred.predict_jobs(jobs)]
+    if policy.repredicts and pred is not None:
+        preds = predict_lengths(pred, jobs)
+        q = policy.cfg.risk_quantile
+        if q is None:
+            raw = [p.mean for p in preds]
+        else:
+            raw = [p.quantile(q) for p in preds]
+        means = [p.mean for p in preds]
     else:
         raw = [policy.priority(j, now) for j in jobs]
-    for j, p in zip(jobs, raw):
+        means = raw
+    for j, p, m in zip(jobs, raw, means):
         j.priority = p
         j.predictions.append(p)
         j.tokens_at_last_score = j.tokens_generated
+        if policy.predicts_length:
+            j.expected_remaining = m
+            j.pred_trace.append((j.tokens_generated, m))
     return raw
 
 
@@ -187,6 +222,21 @@ def cached_raw_priority(job: Job) -> float:
     if job.tokens_at_last_score is None:
         return float(job.priority)
     return max(float(job.priority)
+               - (job.tokens_generated - job.tokens_at_last_score), 0.0)
+
+
+def cached_expected_remaining(job: Job) -> float:
+    """The job's *expected* remaining length (progress-decayed), for the
+    cluster layer's predicted-work accounting.  Identical to
+    :func:`cached_raw_priority` when no risk quantile is set (the scoring
+    value IS the expectation then); with risk-aware scoring the priority is
+    an upper quantile, and balancing load on a sum of upper quantiles would
+    systematically over-count — work accounting stays on the mean."""
+    base = (job.expected_remaining if job.expected_remaining is not None
+            else job.priority)
+    if job.tokens_at_last_score is None:
+        return float(base)
+    return max(float(base)
                - (job.tokens_generated - job.tokens_at_last_score), 0.0)
 
 

@@ -31,6 +31,7 @@ from repro.core import (
     RequestOptions,
     SchedulerConfig,
     summarize,
+    wrap_calibration,
 )
 from repro.data import GammaArrivals, WorkloadGenerator
 from repro.engine import EngineConfig, EngineExecutor, InferenceEngine
@@ -69,20 +70,25 @@ def load_requests(args):
 
 def build_predictor(args):
     if args.predictor == "oracle":
-        return OraclePredictor()
-    cfg = PredictorConfig(
-        encoder=EncoderArchConfig(d_model=128, n_heads=4, n_layers=3,
-                                  d_ff=256, max_len=192),
-        n_fc_layers=8, fc_hidden=256, max_len=192,
-    )
-    pred = BGEPredictor(cfg, seed=0)
-    if args.predictor_ckpt:
-        step = latest_step(args.predictor_ckpt)
-        if step is None:
-            sys.exit(f"no checkpoint in {args.predictor_ckpt}")
-        pred.params, _ = restore_checkpoint(args.predictor_ckpt, step,
-                                            pred.params)
-    return pred
+        base = OraclePredictor()
+    else:
+        cfg = PredictorConfig(
+            encoder=EncoderArchConfig(d_model=128, n_heads=4, n_layers=3,
+                                      d_ff=256, max_len=192),
+            n_fc_layers=8, fc_hidden=256, max_len=192,
+        )
+        base = BGEPredictor(cfg, seed=0)
+        if args.predictor_ckpt:
+            step = latest_step(args.predictor_ckpt)
+            if step is None:
+                sys.exit(f"no checkpoint in {args.predictor_ckpt}")
+            base.params, _ = restore_checkpoint(args.predictor_ckpt, step,
+                                                base.params)
+    # serving-time calibration wrappers compose over any base predictor;
+    # the live loop feeds them finish-time observations (ELIS frontend
+    # calls predictor.observe as requests complete)
+    cal = None if args.calibrate == "none" else args.calibrate
+    return wrap_calibration(base, cal)
 
 
 def main() -> None:
@@ -111,6 +117,16 @@ def main() -> None:
     ap.add_argument("--repredict-every", type=int, default=1,
                     help="full predictor re-score every N windows (between "
                          "them cached predictions decay by progress)")
+    ap.add_argument("--calibrate", default="none",
+                    choices=["none", "ema", "conformal", "ema+conformal"],
+                    help="serving-time calibration over the predictor: EMA "
+                         "multiplicative debiasing and/or conformal "
+                         "quantiles from finish-time residuals")
+    ap.add_argument("--risk-quantile", type=float, default=None,
+                    help="rank ISRTF on this calibrated upper quantile of "
+                         "the predicted remaining length instead of the "
+                         "point estimate (e.g. 0.9 hedges against "
+                         "underestimates)")
     ap.add_argument("--max-output", type=int, default=32)
     ap.add_argument("--trace", default=None)
     ap.add_argument("--n", type=int, default=8)
@@ -144,11 +160,16 @@ def main() -> None:
             n_nodes=args.workers,
             scheduler=SchedulerConfig(policy=args.policy, window=args.window,
                                       batch_size=args.slots,
-                                      repredict_every=args.repredict_every),
+                                      repredict_every=args.repredict_every,
+                                      risk_quantile=args.risk_quantile),
             preemption=PreemptionConfig(enabled=not args.no_preemption),
             placement=args.placement,
             rebalance=args.rebalance,
             rebalance_threshold=args.rebalance_threshold,
+            # the live engine only reveals a request's length at finish —
+            # calibration learns from finish observations, never from the
+            # trace's nominal max_tokens
+            observe_in_flight=False,
         ),
         predictor,
         EngineExecutor(engines),

@@ -10,12 +10,11 @@ from repro.core import (
     ElisServer,
     FrontendConfig,
     Job,
-    NoisyOraclePredictor,
-    OraclePredictor,
     PreemptionConfig,
     SchedulerConfig,
     summarize,
 )
+from repro.core import predictor as predictor_mod
 from repro.core import api
 from repro.data.arrivals import GammaArrivals
 from repro.data.workload import Request, WorkloadGenerator, bursty_arrival_times
@@ -72,20 +71,28 @@ class ExperimentConfig:
     arrivals: str = "gamma"
     #: requests per flash crowd when ``arrivals="bursty"``
     burst_size: int = 8
+    #: serving-time calibration over the base predictor:
+    #: none | ema | conformal | ema+conformal
+    #: (repro.core.predictor.wrap_calibration)
+    calibrate: str = "none"
+    #: risk-aware ISRTF: rank on this calibrated upper quantile instead of
+    #: the point estimate (None = the paper's mean ranking)
+    risk_quantile: Optional[float] = None
+    #: synthetic multiplicative mis-calibration injected into the noisy
+    #: oracle (< 1 = systematic underestimates); 1.0 = unbiased
+    predictor_bias: float = 1.0
+    #: feed ground-truth remaining to predictor.observe every window (the
+    #: simulator replays realised lengths, so truth is available mid-flight)
+    observe_in_flight: bool = True
 
 
-def make_predictor(kind: str, seed: int = 0, bge=None):
-    if kind == "oracle":
-        return OraclePredictor()
-    if kind == "noisy_oracle":
-        return NoisyOraclePredictor(seed=seed)
-    if kind == "bge":
-        if bge is None:
-            raise ValueError("pass a trained BGEPredictor via bge=")
-        return bge
-    if kind == "none":
-        return None
-    raise ValueError(kind)
+def make_predictor(kind: str, seed: int = 0, bge=None, *,
+                   calibration=None, bias: float = 1.0):
+    """Back-compat wrapper over :func:`repro.core.predictor.make_predictor`
+    (the registry), keeping the old positional (kind, seed, bge) call."""
+    cal = None if calibration in (None, "none") else calibration
+    return predictor_mod.make_predictor(kind, seed=seed, bge=bge,
+                                        calibration=cal, bias=bias)
 
 
 def run_experiment(cfg: ExperimentConfig, *, bge=None,
@@ -120,18 +127,22 @@ def run_experiment(cfg: ExperimentConfig, *, bge=None,
         }
     executor = SimExecutor(profile, node_profiles=node_profiles)
 
-    predictor = make_predictor(cfg.predictor, seed=cfg.seed + 1, bge=bge)
+    predictor = make_predictor(cfg.predictor, seed=cfg.seed + 1, bge=bge,
+                               calibration=cfg.calibrate,
+                               bias=cfg.predictor_bias)
     fe_cfg = FrontendConfig(
         n_nodes=cfg.n_nodes,
         scheduler=SchedulerConfig(
             policy=cfg.policy, window=cfg.window, batch_size=cfg.batch_size,
             aging_rate=cfg.aging_rate, repredict_every=cfg.repredict_every,
+            risk_quantile=cfg.risk_quantile,
         ),
         preemption=cfg.preemption,
         placement=cfg.placement,
         node_token_cost=executor.node_token_cost(cfg.n_nodes),
         rebalance=cfg.rebalance,
         rebalance_threshold=cfg.rebalance_threshold,
+        observe_in_flight=cfg.observe_in_flight,
     )
     server = ElisServer(fe_cfg, predictor, executor)
     for r in requests:

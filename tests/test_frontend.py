@@ -292,6 +292,8 @@ def test_busy_until_is_live_and_monotone():
 
 #: last commit before the cluster-scheduling layer (PR 2)
 PRE_PR_SHA = "726cdb4"
+#: last commit before the distribution-aware predictor API (PR 5)
+PRE_PR5_SHA = "9e4b2da"
 
 PROBE = """
 import json
@@ -302,20 +304,33 @@ cfg = ExperimentConfig(model="vic", policy="isrtf", predictor="noisy_oracle",
 print(json.dumps(run_experiment(cfg), sort_keys=True))
 """
 
+#: exercises the new predict() path harder: work-aware placement (the
+#: arrival-time prediction), rebalancing, and bursty arrivals — with
+#: calibration off and risk_quantile=None it must replay the old
+#: init/iter scoring draw-for-draw
+PROBE_PREDICT = """
+import json
+from repro.simulate import ExperimentConfig, run_experiment
+cfg = ExperimentConfig(model="vic", policy="isrtf", predictor="noisy_oracle",
+                       n_requests=40, n_nodes=2, batch_size=4,
+                       rps_multiple=1.3, seed=3,
+                       placement="least_predicted_work", rebalance=True,
+                       arrivals="bursty", burst_size=12)
+print(json.dumps(run_experiment(cfg), sort_keys=True))
+"""
 
-def test_least_jobs_trace_identical_to_pre_pr(tmp_path):
-    """Default placement must reproduce the pre-PR greedy balancer
-    bit-identically (NoisyOraclePredictor draws RNG per prediction in
-    scoring order, so any divergence in placement, scoring order, or event
-    ordering shows up immediately in every aggregate)."""
+
+def _old_build_metrics(tmp_path, sha, probe):
+    """Run ``probe`` against a git-archive checkout of ``sha``; skips when
+    the sha is unavailable (shallow checkout) or git is missing."""
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     if shutil.which("git") is None:
         pytest.skip("git unavailable")
     ar = subprocess.run(
-        ["git", "-C", repo, "archive", PRE_PR_SHA, "src"],
+        ["git", "-C", repo, "archive", sha, "src"],
         capture_output=True)
     if ar.returncode != 0:
-        pytest.skip(f"pre-PR sha {PRE_PR_SHA} unavailable "
+        pytest.skip(f"pre-PR sha {sha} unavailable "
                     f"(shallow checkout?): {ar.stderr.decode()[:200]}")
     old = tmp_path / "old"
     old.mkdir()
@@ -326,10 +341,18 @@ def test_least_jobs_trace_identical_to_pre_pr(tmp_path):
 
     env = dict(os.environ, PYTHONPATH=str(old / "src"),
                JAX_PLATFORMS="cpu")
-    proc = subprocess.run([sys.executable, "-c", PROBE], env=env,
+    proc = subprocess.run([sys.executable, "-c", probe], env=env,
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr[-2000:]
-    old_metrics = json.loads(proc.stdout)
+    return json.loads(proc.stdout)
+
+
+def test_least_jobs_trace_identical_to_pre_pr(tmp_path):
+    """Default placement must reproduce the pre-PR greedy balancer
+    bit-identically (NoisyOraclePredictor draws RNG per prediction in
+    scoring order, so any divergence in placement, scoring order, or event
+    ordering shows up immediately in every aggregate)."""
+    old_metrics = _old_build_metrics(tmp_path, PRE_PR_SHA, PROBE)
 
     from repro.simulate import ExperimentConfig, run_experiment
     cfg = ExperimentConfig(model="vic", policy="isrtf",
@@ -338,5 +361,23 @@ def test_least_jobs_trace_identical_to_pre_pr(tmp_path):
     new_metrics = run_experiment(cfg)
     # the old build predates the migration counter; every metric it knows
     # about must match bit-for-bit
+    for k, v in old_metrics.items():
+        assert new_metrics[k] == v, (k, v, new_metrics[k])
+
+
+def test_predict_api_trace_identical_to_pre_pr5(tmp_path):
+    """The distribution-aware predict() path (PR 5), with calibration off
+    and risk_quantile=None, must reproduce the scalar-era scheduler
+    bit-identically — including the arrival-estimate draws consumed by
+    work-aware placement and the rebalancer."""
+    old_metrics = _old_build_metrics(tmp_path, PRE_PR5_SHA, PROBE_PREDICT)
+
+    from repro.simulate import ExperimentConfig, run_experiment
+    cfg = ExperimentConfig(model="vic", policy="isrtf",
+                           predictor="noisy_oracle", n_requests=40,
+                           n_nodes=2, batch_size=4, rps_multiple=1.3, seed=3,
+                           placement="least_predicted_work", rebalance=True,
+                           arrivals="bursty", burst_size=12)
+    new_metrics = run_experiment(cfg)
     for k, v in old_metrics.items():
         assert new_metrics[k] == v, (k, v, new_metrics[k])

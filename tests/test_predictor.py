@@ -109,6 +109,66 @@ def test_iterative_input_includes_partial_output(tiny_cfg):
     assert longer[: len(base)] == base
 
 
+def test_evaluate_pads_per_chunk_not_whole_list(tiny_cfg, monkeypatch):
+    """evaluate must never materialise one (N, max_len) array for the whole
+    sample list: padding happens per 256-row chunk (batch dim bucketed, so
+    trailing chunks stay on the compile ladder)."""
+    import repro.core.predictor as P
+
+    tr, _, te = make_predictor_dataset(260, seed=2, max_len=128, max_steps=3)
+    samples = (tr + te)[:300]
+    p = BGEPredictor(tiny_cfg)
+
+    seen = []
+    orig = p._apply
+
+    def spying_apply(params, toks, mask):
+        seen.append(toks.shape)
+        return orig(params, toks, mask)
+
+    monkeypatch.setattr(p, "_apply", spying_apply)
+    m = p.evaluate(samples)
+    assert all(shape[0] <= 256 for shape in seen), seen
+    # trailing chunk is bucket-padded: 300 -> chunks of 256 + 44 -> (256, 64)
+    assert seen == [(256, 128), (64, 128)]
+    # and the chunked metrics agree with per-sample inference
+    singles = np.concatenate([p._predict_samples([s]) for s in samples[:32]])
+    np.testing.assert_allclose(p._predict_samples(samples[:32]), singles,
+                               rtol=1e-4)
+    assert np.isfinite(m["mae"]) and np.isfinite(m["r2"])
+
+
+def test_evaluate_trace_count_bounded(tiny_cfg):
+    """Different evaluation-set sizes reuse the batch-bucket ladder instead
+    of compiling one shape per size."""
+    tr, _, _ = make_predictor_dataset(300, seed=3, max_len=128, max_steps=2)
+    p = BGEPredictor(tiny_cfg)
+    base = p.num_traces
+    p.evaluate(tr[:300])          # chunks 256 + 44 -> buckets {256, 64}
+    first = p.num_traces - base
+    p.evaluate(tr[:290])          # 256 + 34 -> {256, 64} again: no retrace
+    p.evaluate(tr[:60])           # -> bucket 64: cached
+    assert p.num_traces - base == first
+
+
+def test_fit_estimates_residual_spread(tiny_cfg):
+    tr, _, _ = make_predictor_dataset(200, seed=4, max_len=128, max_steps=3)
+    p = BGEPredictor(tiny_cfg, seed=0)
+    assert p.resid_sigma == 0.0
+    j = Job(job_id=0, prompt="x", prompt_tokens=[1, 2], arrival_time=0.0)
+    [before] = p.predict([j])
+    assert before.quantiles == ()          # untrained: degenerate
+    p.fit(tr, num_steps=30, batch_size=16)
+    assert p.resid_sigma > 0.0
+    # per-step ladder (Fig. 2(b)): step 0 has enough train samples
+    assert 0 in p.resid_by_step
+    [after] = p.predict([j])
+    assert after.quantiles                  # lognormal ladder attached
+    assert after.quantile(0.9) > after.quantile(0.5)
+    # num_traces was reset after fit: serving-path compile budget intact
+    assert p.num_traces <= 2
+
+
 def test_oracle_is_exact():
     o = OraclePredictor()
     j = Job(job_id=0, prompt="x", prompt_tokens=[1], arrival_time=0.0,
