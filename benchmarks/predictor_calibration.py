@@ -113,7 +113,9 @@ def one_cell(regime: str, calibrate: str, risk: Optional[float],
             n_requests=n_requests, batch_size=4, rps_multiple=1.5,
             seed=seed, arrivals="bursty", burst_size=24,
         )
-        m = run_experiment(cfg, bge=bge)
+        # streaming aggregation keeps peak memory flat across the sweep
+        # (means/MAE/bias exact; p99 within the sketch's ~0.3% tolerance)
+        m = run_experiment(cfg, bge=bge, stream_metrics=True)
         assert m["n_unfinished"] == 0, m
         agg["jct_mean"].append(m["jct_mean"])
         agg["jct_p99"].append(m["jct_p99"])

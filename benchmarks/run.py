@@ -32,6 +32,7 @@ def main() -> None:
         predictor_calibration,
         roofline,
         scheduler_overhead,
+        sim_scale,
         table2_predictor,
         table5_jct,
     )
@@ -78,6 +79,10 @@ def main() -> None:
          + ";live_vs_sim_ratio=" + str(next(
              r["calibration"]["live_vs_sim_ratio"] for r in rows
              if "calibration" in r))),
+        ("sim_scale", sim_scale.run,
+         lambda rows: f"requests_per_s={rows[0]['requests_per_s']};"
+                      f"peak_rss_mb={rows[0]['peak_rss_mb']};"
+                      f"trace_identical={rows[-1]['trace_identical']}"),
         ("ablations", ablations.run,
          lambda rows: "mlfq_gain_pct=" + str(next(
              (r["gain_vs_fcfs_pct"] for r in rows

@@ -102,13 +102,24 @@ class Request:
     @classmethod
     def from_workload(cls, r, options: Optional[RequestOptions] = None
                       ) -> "Request":
-        """Adapt a ``repro.data.workload.Request`` (generator ground truth)."""
+        """Adapt a ``repro.data.workload.Request`` (generator ground truth).
+
+        Without explicit ``options``, the workload record's own serving
+        attributes (tenant / priority class / deadline — set by the
+        scenario library, absent on plain generator output) are forwarded
+        so multi-tenant scenarios flow through unchanged."""
+        if options is None:
+            options = RequestOptions(
+                deadline=getattr(r, "deadline", None),
+                tenant=getattr(r, "tenant", None) or "default",
+                priority_class=int(getattr(r, "priority_class", 0) or 0),
+            )
         return cls(
             prompt=r.prompt,
             prompt_tokens=r.prompt_tokens,
             arrival_time=r.arrival_time,
             request_id=r.request_id,
-            options=options or RequestOptions(),
+            options=options,
             true_output_len=r.true_output_len,
             output_tokens=r.output_tokens,
         )
@@ -328,6 +339,28 @@ class ElisServer:
             if _STATE_TO_STATUS[job.state].terminal:
                 out.append(Response.from_job(job))
         return out
+
+    def drain_stream(self) -> Iterator[Response]:
+        """Like :meth:`drain`, but yield each terminal Response and
+        immediately release the underlying job's records — constant memory
+        over arbitrarily long runs (pairs with the streaming aggregator in
+        :mod:`repro.core.metrics`).  Responses come in submission order;
+        released requests are forgotten (``status`` raises for them
+        afterwards)."""
+        while self._fe.pending():
+            self._fe.step()
+        order = list(self._order)
+        try:
+            for rid in order:
+                job = self._jobs.get(rid)
+                if job is None or not _STATE_TO_STATUS[job.state].terminal:
+                    continue
+                resp = Response.from_job(job)
+                self._fe.forget(rid)
+                del self._jobs[rid]
+                yield resp
+        finally:
+            self._order = [rid for rid in order if rid in self._jobs]
 
     def release(self, handle: RequestHandle) -> bool:
         """Drop a *terminal* request's records (job, chunks, response data)

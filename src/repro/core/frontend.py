@@ -67,6 +67,7 @@ from repro.core.scheduler import (
     effective_priority,
     make_policy,
     score_pool,
+    select_fills,
     select_preemptions,
 )
 
@@ -586,10 +587,8 @@ class ELISFrontend:
         if backend_free is not None:
             free = min(free, backend_free)
         if free > 0 and waiting:
-            order = sorted(
-                (eff[job.job_id], k, job) for k, job in enumerate(waiting)
-            )
-            for _, _, job in order[:free]:
+            picks = select_fills([eff[job.job_id] for job in waiting], free)
+            for job in [waiting[k] for k in picks]:
                 waiting.remove(job)
                 job.state = JobState.RUNNING
                 job.record_dispatch(now)

@@ -325,6 +325,21 @@ class PreemptionConfig:
     recompute_tokens: bool = True
 
 
+def select_fills(waiting_eff: Sequence[float], free: int) -> List[int]:
+    """Indices into a waiting queue to dispatch into ``free`` slots,
+    best-first: ordered by (effective priority, queue position) — queue
+    position breaks ties so equal-priority jobs dispatch in enqueue order.
+
+    The single fill-selection rule, shared by the exact event loop
+    (``ELISFrontend._form_batch``) and the vectorized fast path
+    (``repro.simulate.scale``) so the two can never drift."""
+    if free <= 0 or not waiting_eff:
+        return []
+    order = sorted(range(len(waiting_eff)),
+                   key=lambda k: (waiting_eff[k], k))
+    return order[:free]
+
+
 def select_preemptions(
     running: Sequence[Tuple[float, Job]],
     waiting: Sequence[Tuple[float, Job]],

@@ -53,6 +53,43 @@ class PoissonArrivals:
         return np.cumsum(self.sample_intervals(n, rng))
 
 
+def diurnal_arrival_times(n: int, mean_rate: float,
+                          rng: np.random.RandomState, *,
+                          amplitude: float = 0.6,
+                          period_s: float = 3600.0,
+                          noise_sigma: float = 0.0,
+                          grid_points: int = 4096) -> np.ndarray:
+    """Inhomogeneous-Poisson arrivals under a diurnal (sinusoidal) rate
+    curve, via integrated-rate inversion.
+
+        rate(t) = mean_rate * (1 + amplitude * sin(2π t / period_s))
+                  [* lognormal(noise_sigma) jitter per grid cell]
+
+    Unit-rate exponential marks are mapped through the inverse of the
+    cumulative rate Λ(t) (trapezoid-integrated on a time grid, inverted
+    with ``np.interp``) — the standard time-change construction, fully
+    vectorized: one million arrivals cost two cumsums and an interp.
+    Returned times are sorted; the long-run mean rate is ``mean_rate``.
+    """
+    assert n > 0 and mean_rate > 0
+    assert 0.0 <= amplitude < 1.0, "amplitude >= 1 makes the rate negative"
+    # unit-rate event marks, drawn once; the grid (re)extends to cover them
+    marks = np.cumsum(rng.exponential(1.0, size=n))
+    horizon = 1.25 * n / mean_rate + period_s
+    while True:
+        t = np.linspace(0.0, horizon, grid_points)
+        rate = mean_rate * (1.0 + amplitude *
+                            np.sin(2.0 * np.pi * t / period_s))
+        if noise_sigma > 0:
+            rate = rate * rng.lognormal(-0.5 * noise_sigma ** 2,
+                                        noise_sigma, size=grid_points)
+        cum = np.concatenate(
+            ([0.0], np.cumsum(0.5 * (rate[1:] + rate[:-1]) * np.diff(t))))
+        if cum[-1] >= marks[-1]:
+            return np.interp(marks, cum, t)
+        horizon *= 2.0
+
+
 # --------------------------------------------------------------------------- #
 # Fitting
 # --------------------------------------------------------------------------- #

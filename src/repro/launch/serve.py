@@ -33,7 +33,13 @@ from repro.core import (
     summarize,
     wrap_calibration,
 )
+from repro.core.metrics import fairness_ratio, summarize_by_tenant
 from repro.data import GammaArrivals, WorkloadGenerator
+from repro.data.workload import (
+    SCENARIOS,
+    build_scale_workload,
+    scale_workload_requests,
+)
 from repro.engine import EngineConfig, EngineExecutor, InferenceEngine
 from repro.models import init_params
 from repro.models.encoder import EncoderArchConfig
@@ -41,6 +47,16 @@ from repro.training import latest_step, restore_checkpoint
 
 
 def load_requests(args):
+    if args.scenario:
+        if args.trace:
+            sys.exit("--scenario and --trace are mutually exclusive")
+        rng = np.random.RandomState(args.seed)
+        w = build_scale_workload(args.scenario, args.n, args.rate, rng)
+        # scenario workloads carry tenant / priority / deadline per request;
+        # from_workload forwards them into RequestOptions so the frontend's
+        # priority banding and SLO accounting see them
+        reqs = [Request.from_workload(r) for r in scale_workload_requests(w)]
+        return reqs, dict(w.slo_targets)
     if args.trace:
         reqs = []
         for line in open(args.trace):
@@ -53,7 +69,7 @@ def load_requests(args):
                 options=RequestOptions(max_tokens=args.max_output,
                                        deadline=r.get("deadline")),
             ))
-        return reqs
+        return reqs, {}
     gen = WorkloadGenerator(seed=args.seed)
     rng = np.random.RandomState(args.seed)
     times = GammaArrivals().rate_scaled(args.rate).sample_arrival_times(
@@ -65,7 +81,7 @@ def load_requests(args):
             request_id=i, prompt=r.prompt, prompt_tokens=r.prompt_tokens,
             arrival_time=float(t), true_output_len=r.true_output_len,
             options=RequestOptions(max_tokens=args.max_output)))
-    return reqs
+    return reqs, {}
 
 
 def build_predictor(args):
@@ -129,6 +145,12 @@ def main() -> None:
                          "underestimates)")
     ap.add_argument("--max-output", type=int, default=32)
     ap.add_argument("--trace", default=None)
+    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+                    help="run a registered traffic scenario instead of the "
+                         "default synthetic stream: --n requests at --rate "
+                         "mean req/s, with per-tenant arrival processes, "
+                         "priority classes and SLO targets; the summary "
+                         "gains per-tenant metrics and a JCT fairness ratio")
     ap.add_argument("--n", type=int, default=8)
     ap.add_argument("--rate", type=float, default=1.5)
     ap.add_argument("--seed", type=int, default=0)
@@ -174,11 +196,12 @@ def main() -> None:
         predictor,
         EngineExecutor(engines),
     )
-    for r in load_requests(args):
+    requests, slo_targets = load_requests(args)
+    for r in requests:
         server.submit(r)
     responses = server.drain()
     for r in sorted(responses, key=lambda r: r.request_id):
-        print(json.dumps({
+        rec = {
             "request_id": r.request_id,
             "node": r.node,
             "status": r.status.value,
@@ -187,7 +210,10 @@ def main() -> None:
             "queuing_delay_s": round(r.queuing_delay, 3),
             "preemptions": r.n_preemptions,
             "migrations": r.n_migrations,
-        }))
+        }
+        if args.scenario:
+            rec["tenant"] = r.tenant
+        print(json.dumps(rec))
     finished = [r for r in responses if r.ok]
     m = summarize(finished)
     print(f"[serve] mean JCT {m['jct_mean']:.2f}s  queue "
@@ -196,6 +222,18 @@ def main() -> None:
           f"placement={args.placement} "
           f"migrations={server.frontend.migrations}  "
           f"({len(finished)}/{len(responses)} finished)", file=sys.stderr)
+    if args.scenario:
+        tenants = summarize_by_tenant(finished, slo_targets)
+        for t, tm in sorted(tenants.items()):
+            slo = (f"  slo_attainment {tm['slo_attainment']:.2f}"
+                   if "slo_attainment" in tm else "")
+            print(f"[serve]   tenant={t:<12} n={tm['n']:<5} mean JCT "
+                  f"{tm['jct_mean']:.2f}s  p99 {tm['jct_p99']:.2f}s"
+                  f"{slo}", file=sys.stderr)
+        fair = fairness_ratio(
+            {t: tm["jct_mean"] for t, tm in tenants.items()})
+        print(f"[serve]   fairness(max/min mean JCT) {fair:.2f}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -6,22 +6,34 @@ from repro.simulate.profiles import (
     avg_request_rate,
 )
 from repro.simulate.runner import (
+    ARRIVAL_PROCESSES,
     ExperimentConfig,
     compare_policies,
     make_predictor,
     requests_to_jobs,
     run_experiment,
 )
+from repro.simulate.scale import (
+    ScaleResult,
+    ScaleSimConfig,
+    ScaleSimulator,
+    run_exact_reference,
+)
 
 __all__ = [
+    "ARRIVAL_PROCESSES",
     "ExperimentConfig",
     "ModelProfile",
     "PROFILES",
     "SCHED_OVERHEAD_MS",
+    "ScaleResult",
+    "ScaleSimConfig",
+    "ScaleSimulator",
     "SimExecutor",
     "avg_request_rate",
     "compare_policies",
     "make_predictor",
     "requests_to_jobs",
+    "run_exact_reference",
     "run_experiment",
 ]

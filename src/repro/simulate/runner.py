@@ -16,10 +16,24 @@ from repro.core import (
 )
 from repro.core import predictor as predictor_mod
 from repro.core import api
+from repro.core.metrics import (
+    StreamingSummary,
+    fairness_ratio,
+    summarize_by_tenant,
+)
 from repro.data.arrivals import GammaArrivals
-from repro.data.workload import Request, WorkloadGenerator, bursty_arrival_times
+from repro.data.workload import (
+    Request,
+    WorkloadGenerator,
+    build_scale_workload,
+    bursty_arrival_times,
+    scale_workload_requests,
+)
 from repro.simulate.executor import SimExecutor
 from repro.simulate.profiles import PROFILES, ModelProfile, avg_request_rate
+
+#: arrival processes ``ExperimentConfig.arrivals`` dispatches on
+ARRIVAL_PROCESSES = ("bursty", "gamma")
 
 
 def requests_to_jobs(requests: List[Request]) -> List[Job]:
@@ -69,6 +83,12 @@ class ExperimentConfig:
     #: arrival process: "gamma" (FabriX-calibrated) | "bursty" (flash
     #: crowds, repro.data.workload.bursty_arrival_times)
     arrivals: str = "gamma"
+    #: run a registered traffic scenario (repro.data.workload.SCENARIOS:
+    #: diurnal | multi_tenant_slo | flash_crowd) instead of the default
+    #: LMSYS-style workload + ``arrivals`` process; scenario workloads carry
+    #: their own arrivals, tenants, priority classes and SLO targets, and
+    #: the summary gains per-tenant metrics + a JCT fairness ratio
+    scenario: Optional[str] = None
     #: requests per flash crowd when ``arrivals="bursty"``
     burst_size: int = 8
     #: serving-time calibration over the base predictor:
@@ -96,27 +116,46 @@ def make_predictor(kind: str, seed: int = 0, bge=None, *,
 
 
 def run_experiment(cfg: ExperimentConfig, *, bge=None,
-                   requests: Optional[List[Request]] = None) -> Dict[str, float]:
-    profile = PROFILES[cfg.model]
+                   requests: Optional[List[Request]] = None,
+                   stream_metrics: bool = False) -> Dict[str, float]:
+    try:
+        profile = PROFILES[cfg.model]
+    except KeyError:
+        raise ValueError(f"unknown model {cfg.model!r} "
+                         f"(have {sorted(PROFILES)})") from None
     if cfg.hw_speedup != 1.0:
         profile = profile.scaled(cfg.hw_speedup)
     rng = np.random.RandomState(cfg.seed)
 
-    if requests is None:
-        gen = WorkloadGenerator(seed=cfg.seed)
-        requests = gen.sample_requests(cfg.n_requests)
     rate = cfg.rate_override
     if rate is None:
         rate = avg_request_rate(profile, cfg.batch_size) * cfg.rps_multiple
         rate *= cfg.n_nodes
-    if cfg.arrivals == "bursty":
-        times = bursty_arrival_times(len(requests), rate, rng,
-                                     burst_size=cfg.burst_size)
+    scale_w = None
+    if cfg.scenario is not None:
+        if requests is not None:
+            raise ValueError(
+                "ExperimentConfig.scenario and explicit requests are "
+                "mutually exclusive — scenarios build their own workload")
+        # fails loudly on unknown names, listing the registry
+        scale_w = build_scale_workload(cfg.scenario, cfg.n_requests, rate,
+                                       rng)
+        requests = scale_workload_requests(scale_w)
     else:
-        times = GammaArrivals().rate_scaled(rate).sample_arrival_times(
-            len(requests), rng)
-    for r, t in zip(requests, times):
-        r.arrival_time = float(t)
+        if requests is None:
+            gen = WorkloadGenerator(seed=cfg.seed)
+            requests = gen.sample_requests(cfg.n_requests)
+        if cfg.arrivals == "bursty":
+            times = bursty_arrival_times(len(requests), rate, rng,
+                                         burst_size=cfg.burst_size)
+        elif cfg.arrivals == "gamma":
+            times = GammaArrivals().rate_scaled(rate).sample_arrival_times(
+                len(requests), rng)
+        else:
+            raise ValueError(f"unknown arrivals {cfg.arrivals!r} "
+                             f"(have {list(ARRIVAL_PROCESSES)})")
+        for r, t in zip(requests, times):
+            r.arrival_time = float(t)
 
     node_profiles = None
     if cfg.node_profiles:
@@ -147,16 +186,48 @@ def run_experiment(cfg: ExperimentConfig, *, bge=None,
     server = ElisServer(fe_cfg, predictor, executor)
     for r in requests:
         server.submit(api.Request.from_workload(r))
-    responses = server.drain()
-    # cluster-accounting invariant: every admitted job is terminal, so the
-    # load balancer's live-count and predicted-work totals are back to zero
-    server.frontend.state.assert_drained()
-    done = [r for r in responses if r.ok]
-    m = summarize(done)
+    slo_targets = dict(scale_w.slo_targets) if scale_w is not None else {}
+    if stream_metrics:
+        # constant-memory aggregation: responses are consumed (and their
+        # job records released) as they stream out of the server
+        g = StreamingSummary()
+        per_tenant: Dict[str, StreamingSummary] = {}
+        n_unfinished = 0
+        for resp in server.drain_stream():
+            if not resp.ok:
+                n_unfinished += 1
+                continue
+            g.add_response(resp)
+            s = per_tenant.get(resp.tenant)
+            if s is None:
+                s = per_tenant[resp.tenant] = StreamingSummary(
+                    slo_target=slo_targets.get(resp.tenant))
+            s.add_response(resp)
+        server.frontend.state.assert_drained()
+        m = g.summarize()
+        m["n_finished"] = g.n
+        m["n_unfinished"] = n_unfinished
+        if cfg.scenario is not None:
+            m["tenants"] = {t: s.summarize()
+                            for t, s in sorted(per_tenant.items())}
+            m["fairness_jct"] = fairness_ratio(
+                {t: s.sketch.mean for t, s in per_tenant.items()})
+    else:
+        responses = server.drain()
+        # cluster-accounting invariant: every admitted job is terminal, so
+        # the load balancer's live-count and predicted-work totals are back
+        # to zero
+        server.frontend.state.assert_drained()
+        done = [r for r in responses if r.ok]
+        m = summarize(done)
+        m["n_finished"] = len(done)
+        m["n_unfinished"] = len(responses) - len(done)
+        if cfg.scenario is not None:
+            m["tenants"] = summarize_by_tenant(done, slo_targets)
+            m["fairness_jct"] = fairness_ratio(
+                {t: s["jct_mean"] for t, s in m["tenants"].items()})
     m["mem_preemptions"] = executor.mem_preemptions
     m["migrations"] = server.frontend.migrations
-    m["n_finished"] = len(done)
-    m["n_unfinished"] = len(responses) - len(done)
     return m
 
 

@@ -1,0 +1,371 @@
+"""Scale simulation subsystem (repro.simulate.scale + scenario library).
+
+The load-bearing property: the vectorized fast path is *trace-identical*
+to the exact ``ELISFrontend`` event loop on every supported config — same
+IEEE arithmetic in the same order, so per-job finish times, queueing
+delays, preemption counts and finish order match bitwise, not just
+statistically.  The property tests sweep policy x predictor x preemption
+x placement x cluster shape over randomized workloads (priority classes,
+deadlines, multi-tenant mixes) and diff every outcome array.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.metrics import (
+    QuantileSketch,
+    StreamingSummary,
+    fairness_ratio,
+    summarize,
+)
+from repro.core.scheduler import select_fills
+from repro.data.workload import (
+    SCENARIOS,
+    ScaleWorkload,
+    build_scale_workload,
+    scale_workload_requests,
+)
+from repro.simulate import ExperimentConfig, run_experiment
+from repro.simulate.scale import (
+    EXPIRED,
+    FINISHED,
+    ScaleSimConfig,
+    ScaleSimulator,
+    run_exact_reference,
+)
+
+# --------------------------------------------------------------------------- #
+# Randomized workloads for the fidelity sweep
+# --------------------------------------------------------------------------- #
+
+
+def _random_workload(seed: int, n: int = 36, *, rate: float = 1.2,
+                     with_deadlines: bool = False) -> ScaleWorkload:
+    """A small adversarial workload: bursty arrivals (ties included),
+    mixed lengths spanning several scheduling windows, two tenants, two
+    priority bands, optional finite deadlines."""
+    rng = np.random.RandomState(seed)
+    arrival = np.sort(np.round(rng.uniform(0.0, n / rate, size=n), 2))
+    # duplicate a few arrival times: same-instant submissions exercise the
+    # event heap's seq tie-break
+    if n >= 4:
+        arrival[1] = arrival[0]
+        arrival[n // 2] = arrival[n // 2 - 1]
+    length = rng.randint(1, 130, size=n).astype(np.int64)
+    tenant_id = rng.randint(0, 2, size=n).astype(np.int32)
+    klass = rng.randint(0, 2, size=n).astype(np.int16)
+    deadline = np.full(n, np.inf)
+    if with_deadlines:
+        tight = rng.rand(n) < 0.35
+        deadline[tight] = arrival[tight] + rng.uniform(2.0, 60.0,
+                                                       size=int(tight.sum()))
+    return ScaleWorkload(
+        arrival=arrival, length=length,
+        prompt_len=np.full(n, 12, np.int64),
+        tenant_id=tenant_id, priority_class=klass, deadline=deadline,
+        tenants=("alpha", "beta"), slo_targets={"alpha": 30.0})
+
+
+def _assert_trace_identical(fast, exact, ctx):
+    np.testing.assert_array_equal(fast.state, exact.state, err_msg=ctx)
+    np.testing.assert_array_equal(fast.finished_order, exact.finished_order,
+                                  err_msg=ctx)
+    np.testing.assert_array_equal(fast.n_preemptions, exact.n_preemptions,
+                                  err_msg=ctx)
+    np.testing.assert_array_equal(fast.n_iterations, exact.n_iterations,
+                                  err_msg=ctx)
+    for name in ("finish", "first_token", "queuing_delay"):
+        f = getattr(fast, name)
+        e = getattr(exact, name)
+        assert np.array_equal(f, e, equal_nan=True), (
+            f"{ctx}: {name} diverges (max delta "
+            f"{np.nanmax(np.abs(f - e))})")
+
+
+# --------------------------------------------------------------------------- #
+# Fast path == exact frontend (the subsystem's core contract)
+# --------------------------------------------------------------------------- #
+
+
+class TestFastPathFidelity:
+    @settings(max_examples=20, deadline=None)
+    @given(policy=st.sampled_from(["fcfs", "sjf", "isrtf"]),
+           predictor=st.sampled_from(["oracle", "noisy_oracle"]),
+           preempt=st.booleans(),
+           n_nodes=st.sampled_from([1, 2, 3]),
+           placement=st.sampled_from(["least_jobs", "least_predicted_work",
+                                      "least_eta"]),
+           aging=st.sampled_from([0.0, 0.05]),
+           repredict=st.sampled_from([1, 3]),
+           coalesce=st.booleans(),
+           deadlines=st.booleans(),
+           seed=st.integers(0, 10_000))
+    def test_trace_identical_sweep(self, policy, predictor, preempt, n_nodes,
+                                   placement, aging, repredict, coalesce,
+                                   deadlines, seed):
+        from repro.core import PreemptionConfig
+
+        cfg = ScaleSimConfig(
+            model="vic", policy=policy, predictor=predictor,
+            n_nodes=n_nodes, batch_size=3, window=50,
+            aging_rate=aging, repredict_every=repredict,
+            preemption=PreemptionConfig(enabled=preempt),
+            placement=placement, seed=seed, coalesce=coalesce)
+        w = _random_workload(seed, with_deadlines=deadlines)
+        fast = ScaleSimulator(cfg).run(w)
+        exact = run_exact_reference(cfg, w)
+        _assert_trace_identical(fast, exact, ctx=repr(cfg))
+
+    def test_heterogeneous_cluster(self):
+        cfg = ScaleSimConfig(model="vic", policy="isrtf", n_nodes=3,
+                             batch_size=2, hw_speedup=2.0,
+                             node_profiles={1: "lam13"},
+                             placement="least_eta", seed=7)
+        w = _random_workload(7, n=48)
+        fast = ScaleSimulator(cfg).run(w)
+        exact = run_exact_reference(cfg, w)
+        _assert_trace_identical(fast, exact, ctx="hetero")
+
+    def test_coalescing_fires_and_stays_exact(self):
+        # a sparse trickle leaves nodes with empty queues for long
+        # stretches: the coalesced-window fast-forward must engage AND
+        # remain bit-exact
+        cfg = ScaleSimConfig(model="vic", policy="isrtf", n_nodes=1,
+                             batch_size=4, seed=11, coalesce=True)
+        w = _random_workload(11, n=24, rate=0.08)
+        res = ScaleSimulator(cfg).run(w)
+        assert res.n_coalesced > 0, "sparse workload never coalesced"
+        exact = run_exact_reference(cfg, w)
+        _assert_trace_identical(res, exact, ctx="coalesce")
+
+    def test_deadlines_expire_identically(self):
+        cfg = ScaleSimConfig(model="vic", policy="fcfs", n_nodes=1,
+                             batch_size=2, seed=3)
+        w = _random_workload(3, n=40, rate=4.0, with_deadlines=True)
+        fast = ScaleSimulator(cfg).run(w)
+        exact = run_exact_reference(cfg, w)
+        _assert_trace_identical(fast, exact, ctx="deadlines")
+        assert (fast.state == EXPIRED).any(), \
+            "workload was meant to blow some deadlines"
+
+
+# --------------------------------------------------------------------------- #
+# Determinism
+# --------------------------------------------------------------------------- #
+
+
+class TestDeterminism:
+    def test_repeat_runs_bit_equal(self):
+        cfg = ScaleSimConfig(model="vic", policy="isrtf",
+                             predictor="noisy_oracle", n_nodes=2,
+                             batch_size=3, seed=5,
+                             placement="least_predicted_work")
+
+        def once():
+            rng = np.random.RandomState(5)
+            w = build_scale_workload("multi_tenant_slo", 300, 2.0, rng)
+            return w, ScaleSimulator(cfg).run(w)
+
+        w1, r1 = once()
+        w2, r2 = once()
+        np.testing.assert_array_equal(w1.arrival, w2.arrival)
+        np.testing.assert_array_equal(w1.length, w2.length)
+        np.testing.assert_array_equal(r1.finish, r2.finish)
+        np.testing.assert_array_equal(r1.state, r2.state)
+        np.testing.assert_array_equal(r1.finished_order, r2.finished_order)
+        assert r1.metrics()["jct_mean"] == r2.metrics()["jct_mean"]
+
+    def test_seed_changes_outcome(self):
+        rng = np.random.RandomState(0)
+        w0 = build_scale_workload("diurnal", 200, 2.0, rng)
+        w1 = build_scale_workload("diurnal", 200, 2.0,
+                                  np.random.RandomState(1))
+        assert not np.array_equal(w0.arrival, w1.arrival)
+
+
+# --------------------------------------------------------------------------- #
+# Streaming metrics
+# --------------------------------------------------------------------------- #
+
+
+class TestStreamingMetrics:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), q=st.sampled_from([0.5, 0.9, 0.99]))
+    def test_sketch_quantile_within_tolerance(self, seed, q):
+        rng = np.random.RandomState(seed)
+        x = rng.lognormal(1.0, 1.2, size=3000)
+        sk = QuantileSketch()
+        sk.add(x[:1000])
+        sk.add(x[1000:])  # incremental ingestion
+        v = sk.quantile(q)
+        tol = 1.0 + sk.rel_error
+        rank = q * (len(x) - 1)
+        # v is within rel_error of a true q-quantile point of the sample:
+        # at least `rank` samples sit at or below v*(1+eps), and at most
+        # `rank` sit strictly below v/(1+eps)
+        assert np.sum(x <= v * tol) >= rank
+        assert np.sum(x < v / tol) <= rank + 1
+
+    def test_streaming_matches_exact_summarize(self):
+        m = run_experiment(
+            ExperimentConfig(scenario="multi_tenant_slo", n_requests=100,
+                             model="vic", predictor="oracle", seed=2),
+            stream_metrics=True)
+        m_exact = run_experiment(
+            ExperimentConfig(scenario="multi_tenant_slo", n_requests=100,
+                             model="vic", predictor="oracle", seed=2))
+        # counts / sums / extremes are exact in the streaming path
+        for k in ("n", "n_finished", "jct_mean", "jct_min", "jct_max",
+                  "queuing_delay_mean", "makespan", "preemptions",
+                  "ttft_mean"):
+            assert m[k] == pytest.approx(m_exact[k], rel=1e-12), k
+        # quantiles carry the sketch's documented tolerance (plus the
+        # interpolation difference of np.percentile at small n)
+        for k in ("jct_p50", "jct_p99"):
+            assert m[k] == pytest.approx(m_exact[k], rel=0.06), k
+        assert set(m["tenants"]) == set(m_exact["tenants"])
+        for t, tm in m["tenants"].items():
+            assert tm["n"] == m_exact["tenants"][t]["n"]
+            if "slo_attainment" in m_exact["tenants"][t]:
+                assert tm["slo_attainment"] == pytest.approx(
+                    m_exact["tenants"][t]["slo_attainment"])
+
+    def test_merge_equals_bulk(self):
+        rng = np.random.RandomState(9)
+        x = rng.lognormal(0.0, 1.0, size=500)
+        whole = QuantileSketch()
+        whole.add(x)
+        a, b = QuantileSketch(), QuantileSketch()
+        a.add(x[:123])
+        b.add(x[123:])
+        a.merge(b)
+        np.testing.assert_array_equal(a.counts, whole.counts)
+        assert a.n == whole.n and a.min == whole.min and a.max == whole.max
+
+    def test_scale_result_metrics_surface(self):
+        rng = np.random.RandomState(4)
+        w = build_scale_workload("multi_tenant_slo", 400, 2.5, rng)
+        res = ScaleSimulator(ScaleSimConfig(model="vic", seed=4)).run(w)
+        m = res.metrics()
+        assert m["n_finished"] + m["n_expired"] <= w.n
+        assert m["n_finished"] == int((res.state == FINISHED).sum())
+        assert set(m["tenants"]) <= set(w.tenants)
+        assert m["requests_per_s"] > 0
+        # per-tenant ns roll up to the global count
+        assert sum(tm["n"] for tm in m["tenants"].values()) == m["n"]
+        # interactive tenant carries an SLO target -> attainment reported
+        assert "slo_attainment" in m["tenants"]["interactive"]
+
+    def test_fairness_ratio(self):
+        assert fairness_ratio({"a": 2.0, "b": 1.0}) == 2.0
+        assert fairness_ratio({"a": 1.0}) == 0.0
+        assert fairness_ratio({}) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Scenario library
+# --------------------------------------------------------------------------- #
+
+
+class TestScenarios:
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_builds_sorted_and_valid(self, name):
+        rng = np.random.RandomState(0)
+        w = build_scale_workload(name, 500, 2.0, rng)
+        assert w.n == 500
+        assert (np.diff(w.arrival) >= 0).all()
+        assert w.length.min() >= 1
+        assert w.tenant_id.max() < len(w.tenants)
+
+    def test_multi_tenant_mix(self):
+        rng = np.random.RandomState(0)
+        w = build_scale_workload("multi_tenant_slo", 1000, 2.0, rng)
+        assert set(w.tenants) == {"interactive", "agent", "batch"}
+        assert set(w.slo_targets) == set(w.tenants)
+        # every tenant actually contributes traffic
+        assert len(np.unique(w.tenant_id)) == 3
+        # priority classes separate the bands
+        assert len(np.unique(w.priority_class)) > 1
+
+    def test_requests_round_trip(self):
+        rng = np.random.RandomState(1)
+        w = build_scale_workload("multi_tenant_slo", 50, 2.0, rng)
+        reqs = scale_workload_requests(w)
+        assert len(reqs) == 50
+        assert [r.arrival_time for r in reqs] == list(w.arrival)
+        assert [r.true_output_len for r in reqs] == list(w.length)
+        assert {r.tenant for r in reqs} <= set(w.tenants)
+
+    def test_head_slices_consistently(self):
+        rng = np.random.RandomState(2)
+        w = build_scale_workload("flash_crowd", 300, 3.0, rng)
+        h = w.head(40)
+        assert h.n == 40
+        np.testing.assert_array_equal(h.arrival, w.arrival[:40])
+        assert h.tenants == w.tenants
+
+
+# --------------------------------------------------------------------------- #
+# Loud dispatch errors (unknown string names never fall through silently)
+# --------------------------------------------------------------------------- #
+
+
+class TestLoudErrors:
+    def test_unknown_scenario(self):
+        with pytest.raises(ValueError, match="diurnal"):
+            build_scale_workload("weekday", 10, 1.0, np.random.RandomState(0))
+
+    def test_unknown_arrivals(self):
+        with pytest.raises(ValueError, match="bursty"):
+            run_experiment(ExperimentConfig(n_requests=4, arrivals="poisson"))
+
+    def test_unknown_model(self):
+        with pytest.raises(ValueError, match="vic"):
+            run_experiment(ExperimentConfig(n_requests=4, model="gpt5"))
+
+    def test_unknown_scenario_via_config(self):
+        with pytest.raises(ValueError, match="multi_tenant_slo"):
+            run_experiment(ExperimentConfig(n_requests=4, scenario="nope"))
+
+    def test_scenario_and_requests_exclusive(self):
+        rng = np.random.RandomState(0)
+        reqs = scale_workload_requests(
+            build_scale_workload("diurnal", 4, 1.0, rng))
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            run_experiment(ExperimentConfig(n_requests=4, scenario="diurnal"),
+                           requests=reqs)
+
+    @pytest.mark.parametrize("field,value,expect", [
+        ("model", "nope", "unknown model"),
+        ("policy", "mlfq", "unsupported policy"),
+        ("predictor", "bge", "unsupported predictor"),
+        ("placement", "round_robin", "unknown placement"),
+        ("node_profiles", {0: "h100"}, "unknown profile"),
+    ])
+    def test_scale_config_validation(self, field, value, expect):
+        cfg = dataclasses.replace(ScaleSimConfig(), **{field: value})
+        with pytest.raises(ValueError, match=expect):
+            ScaleSimulator(cfg)
+
+
+# --------------------------------------------------------------------------- #
+# select_fills — the one ordering rule both loops share
+# --------------------------------------------------------------------------- #
+
+
+class TestSelectFills:
+    @settings(max_examples=30, deadline=None)
+    @given(effs=st.lists(st.floats(0.0, 100.0), min_size=0, max_size=90),
+           free=st.integers(0, 8))
+    def test_matches_vectorized_lexsort(self, effs, free):
+        picked = select_fills(effs, free)
+        arr = np.asarray(effs, dtype=np.float64)
+        want = np.lexsort((np.arange(len(effs)), arr))[:free]
+        assert picked == list(want)
+        # selected set = the `free` smallest, FIFO on ties
+        assert len(picked) == min(free, len(effs))
