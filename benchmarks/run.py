@@ -28,6 +28,7 @@ def main() -> None:
         fig6_batch_sizes,
         fig7_scalability,
         live_engine,
+        multi_device,
         multi_node,
         predictor_calibration,
         roofline,
@@ -79,6 +80,15 @@ def main() -> None:
          + ";live_vs_sim_ratio=" + str(next(
              r["calibration"]["live_vs_sim_ratio"] for r in rows
              if "calibration" in r))),
+        ("multi_device", multi_device.run,
+         # tolerant: on a 1-device host the bench returns a skip note
+         lambda rows: rows[0].get("note") or (
+             "live_vs_sim_ratio=" + str(next(
+                 r["sim_replay"]["live_vs_sim_ratio"] for r in rows
+                 if "sim_replay" in r))
+             + ";eta_jct_s=" + str(next(
+                 r["jct_mean_s"] for r in rows
+                 if r.get("placement") == "least_eta")))),
         ("sim_scale", sim_scale.run,
          lambda rows: f"requests_per_s={rows[0]['requests_per_s']};"
                       f"peak_rss_mb={rows[0]['peak_rss_mb']};"

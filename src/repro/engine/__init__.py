@@ -1,4 +1,9 @@
-from repro.engine.engine import EngineConfig, EngineExecutor, InferenceEngine
+from repro.engine.engine import (
+    EngineConfig,
+    EngineExecutor,
+    InferenceEngine,
+    make_tp_pods,
+)
 from repro.engine.sampler import SamplerConfig, sample
 
 __all__ = [
@@ -6,5 +11,6 @@ __all__ = [
     "EngineExecutor",
     "InferenceEngine",
     "SamplerConfig",
+    "make_tp_pods",
     "sample",
 ]

@@ -43,7 +43,9 @@ Fast path (DESIGN.md §3.2–§3.4):
 """
 from __future__ import annotations
 
+import dataclasses
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -134,15 +136,51 @@ def _scatter_slots(big, small, slots: Sequence[int], n: int):
 
 
 class InferenceEngine:
-    """One backend worker's execution engine (one model, N slots)."""
+    """One backend worker's execution engine (one model, N slots).
 
-    def __init__(self, model_cfg, params, cfg: Optional[EngineConfig] = None):
+    With ``mesh`` (a single-axis ``("model",)`` jax Mesh — one TP pod),
+    parameters and the slot cache are sharded via ``repro.launch.partition``
+    (heads/ffn/vocab on the "model" axis, slots replicated) and every
+    prefill/decode dispatch is jitted with ``NamedSharding``-annotated
+    inputs/outputs, so XLA inserts the tensor-parallel collectives.  The
+    Pallas flash-decode kernel does not partition under a mesh, so
+    ``attn_impl="pallas"`` falls back **loudly** to the XLA path (see
+    DESIGN.md §9)."""
+
+    def __init__(self, model_cfg, params, cfg: Optional[EngineConfig] = None,
+                 mesh=None):
         if cfg is None:
             cfg = EngineConfig()
+        self.pallas_fallback = False
+        self.mesh = mesh
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"engine mesh needs a 'model' axis, got {mesh.axis_names}")
+            if cfg.attn_impl == "pallas":
+                # the loud-fallback rule: the flash-decode kernel indexes
+                # the full head axis per block, so it cannot run partitioned
+                # under the mesh — never silently serve different numerics
+                warnings.warn(
+                    "attn_impl='pallas' does not shard under a mesh; "
+                    "falling back to the XLA decode-attention path",
+                    UserWarning, stacklevel=2)
+                cfg = dataclasses.replace(cfg, attn_impl="xla")
+                self.pallas_fallback = True
         self.model_cfg = model_cfg
-        self.params = params
         self.cfg = cfg
         self.cache = T.init_cache(model_cfg, cfg.max_slots, cfg.max_len)
+        if mesh is None:
+            self.params = params
+            self._param_sh = self._cache_sh = self._repl = None
+        else:
+            from repro.launch.partition import engine_shardings
+            self._param_sh, self._cache_sh, self._repl = engine_shardings(
+                mesh, model_cfg, params, self.cache)
+            # one host copy of params serves any number of pods: each engine
+            # device_puts onto its own (disjoint) mesh
+            self.params = jax.device_put(params, self._param_sh)
+            self.cache = jax.device_put(self.cache, self._cache_sh)
         self.slot_job: List[Optional[int]] = [None] * cfg.max_slots
         self.slot_of: Dict[int, int] = {}
         self.last_token = np.full((cfg.max_slots, 1), PAD_ID, np.int32)
@@ -165,10 +203,33 @@ class InferenceEngine:
             return T.prefill(params, mc, batch, cache1,
                              attn_impl=ec.attn_impl, last_index=last_index)
 
-        self._prefill = jax.jit(_prefill_fn)
+        if mesh is None:
+            self._prefill = jax.jit(_prefill_fn)
+        else:
+            # NamedSharding-annotated in/out: params arrive TP-sharded, the
+            # batched sub-cache replicates slots but shards heads/state, and
+            # XLA inserts the all-reduces (wo / w_down partial sums)
+            self._prefill = jax.jit(
+                _prefill_fn,
+                in_shardings=(self._param_sh, self._repl, self._cache_sh,
+                              self._repl),
+                out_shardings=(self._repl, self._cache_sh))
         self._window_cache: Dict[Tuple[int, int], object] = {}
         #: first generated token (sampled from prefill logits), pending emission
         self._pending_first: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------ #
+    def _canon_cache(self, cache):
+        """Pin a cache pytree to the canonical NamedShardings (mesh mode).
+
+        The slot gather/scatter runs eagerly between jitted dispatches, and
+        its outputs inherit whatever layout GSPMD propagated; an explicit
+        ``device_put`` keeps the persistent cache (and gathered sub-caches)
+        exactly on the contract the annotated jits expect.  No-op off-mesh
+        and free when the sharding already matches."""
+        if self.mesh is None:
+            return cache
+        return jax.device_put(cache, self._cache_sh)
 
     # ------------------------------------------------------------------ #
     @property
@@ -221,7 +282,14 @@ class InferenceEngine:
                 )
                 return cache, jnp.swapaxes(toks, 0, 1)
 
-            self._window_cache[key2] = jax.jit(fn)
+            if self.mesh is None:
+                self._window_cache[key2] = jax.jit(fn)
+            else:
+                self._window_cache[key2] = jax.jit(
+                    fn,
+                    in_shardings=(self._param_sh, self._cache_sh, self._repl,
+                                  self._repl, self._repl),
+                    out_shardings=(self._cache_sh, self._repl))
         return self._window_cache[key2]
 
     # ------------------------------------------------------------------ #
@@ -312,7 +380,8 @@ class InferenceEngine:
             true_lens + [0] * (bb - len(jobs)), jnp.int32)
         slots = [s for s, owner in enumerate(self.slot_job)
                  if owner is None][: len(jobs)]
-        self.cache = _scatter_slots(self.cache, cacheN, slots, len(jobs))
+        self.cache = self._canon_cache(
+            _scatter_slots(self.cache, cacheN, slots, len(jobs)))
         logits_np = np.asarray(logits)
         for i, (job, slot) in enumerate(zip(jobs, slots)):
             self.slot_job[slot] = job.job_id
@@ -353,7 +422,8 @@ class InferenceEngine:
             # slots' cache per *window*, decode reads it K times
             gidx = np.asarray(order + [order[0]] * (db - len(order)),
                               np.int32)
-            sub_cache = _gather_slots(self.cache, jnp.asarray(gidx))
+            sub_cache = self._canon_cache(
+                _gather_slots(self.cache, jnp.asarray(gidx)))
             sub_last = jnp.asarray(self.last_token[gidx])
             alive0 = np.zeros((db,), bool)
             alive0[: len(order)] = True
@@ -376,8 +446,8 @@ class InferenceEngine:
                              jnp.asarray(alive0), sub_key)
         toks = np.asarray(toks)  # (rows, K)
         if compact:
-            self.cache = _scatter_slots(self.cache, new_cache, order,
-                                        len(order))
+            self.cache = self._canon_cache(
+                _scatter_slots(self.cache, new_cache, order, len(order)))
         else:
             self.cache = new_cache
         out_tokens: List[List[int]] = []
@@ -471,23 +541,40 @@ class EngineExecutor(Backend):
         self.engines[node].evict_job(job.job_id)
 
     # ------------------------------------------------------------------ #
+    def node_counters(self) -> Dict[int, Dict[str, int]]:
+        """Per-node compile/dispatch counters — a recompile storm (or
+        dead-FLOPs regression) on one pod must be attributable to that pod,
+        not smeared across the aggregate."""
+        windows = {n: 0 for n in self.engines}
+        for rec in self.window_log:
+            windows[rec["node"]] = windows.get(rec["node"], 0) + 1
+        return {
+            n: {"prefill_traces": eng.num_prefill_traces,
+                "prefill_dispatches": eng.num_prefill_dispatches,
+                "decode_traces": eng.num_decode_traces,
+                "decode_dispatches": eng.num_decode_dispatches,
+                "windows_executed": windows.get(n, 0)}
+            for n, eng in self.engines.items()
+        }
+
     def counters(self) -> Dict[str, int]:
         """Aggregated compile/dispatch counters across this executor's
-        engines (the recompile-storm / dead-FLOPs introspection hooks)."""
+        engines (the recompile-storm / dead-FLOPs introspection hooks);
+        :meth:`node_counters` keeps the per-pod breakdown."""
         agg = {"prefill_traces": 0, "prefill_dispatches": 0,
                "decode_traces": 0, "decode_dispatches": 0,
                "windows_executed": len(self.window_log)}
-        for eng in self.engines.values():
-            agg["prefill_traces"] += eng.num_prefill_traces
-            agg["prefill_dispatches"] += eng.num_prefill_dispatches
-            agg["decode_traces"] += eng.num_decode_traces
-            agg["decode_dispatches"] += eng.num_decode_dispatches
+        for per in self.node_counters().values():
+            for k in ("prefill_traces", "prefill_dispatches",
+                      "decode_traces", "decode_dispatches"):
+                agg[k] += per[k]
         return agg
 
     def calibrated_profile(self, name: str = "live-calibrated",
                            params_b: Optional[float] = None,
                            preempt_batch: int = 64,
-                           mem_limit_frac: float = 0.4):
+                           mem_limit_frac: float = 0.4,
+                           nodes: Optional[Sequence[int]] = None):
         """Fit the simulator's latency model to the measured windows.
 
         The model (``repro.simulate.profiles``):
@@ -497,19 +584,25 @@ class EngineExecutor(Backend):
         occurrence, which pays XLA compile) recovers ``decode_ms_1`` and
         ``batch_slowdown``.  Returns a :class:`ModelProfile` usable by
         ``SimExecutor`` — simulate *this* live engine at cluster scale.
+
+        ``nodes`` restricts the fit to a node subset — on a heterogeneous
+        pod fleet (different TP degrees / hardware) each pod gets its own
+        profile; :meth:`calibrated_node_profiles` fits all of them.
         """
         from repro.simulate.profiles import (CALIBRATION_MEAN_TOKENS,
                                              ModelProfile)
+        keep = set(self.engines if nodes is None else nodes)
+        log = [rec for rec in self.window_log if rec["node"] in keep]
         seen = set()
         samples = []
-        for rec in self.window_log:
+        for rec in log:
             key = (rec["node"], rec["batch"], rec["window"])
             if key in seen:
                 samples.append(rec)
             else:
                 seen.add(key)  # first occurrence pays compile — drop it
         if not samples:
-            samples = list(self.window_log)
+            samples = list(log)
         if not samples:
             raise ValueError("no executed windows to calibrate from")
         w = np.array([r["window"] for r in samples], float)
@@ -531,7 +624,7 @@ class EngineExecutor(Backend):
         #: intercept absorbed — feed it to SimExecutor.sched_overhead_s so
         #: a calibrated replay prices whole windows, not just tokens
         self.fit_overhead_s = overhead
-        eng = next(iter(self.engines.values()))
+        eng = self.engines[min(keep)]
         mc = eng.model_cfg
         if params_b is None:
             # rough dense-transformer parameter count from the config
@@ -545,3 +638,61 @@ class EngineExecutor(Backend):
             preempt_batch=preempt_batch, mem_limit_frac=mem_limit_frac,
             batch_slowdown=slowdown,
         )
+
+    def calibrated_node_profiles(self, prefix: str = "live-node", **kw
+                                 ) -> Dict[int, "object"]:
+        """Per-pod live fits: {node: ModelProfile}.  Also records each
+        pod's fitted per-window overhead in ``node_fit_overhead_s`` (feed
+        the mean to ``SimExecutor.sched_overhead_s`` for a replay that
+        prices whole windows)."""
+        profs, over = {}, {}
+        for n in sorted(self.engines):
+            profs[n] = self.calibrated_profile(name=f"{prefix}{n}",
+                                               nodes=[n], **kw)
+            over[n] = self.fit_overhead_s
+        self.node_fit_overhead_s = over
+        return profs
+
+    def node_token_cost(self) -> Dict[int, float]:
+        """Fitted seconds-per-token per node — the ``least_eta`` placement
+        input, measured from this executor's own window log instead of
+        assumed uniform."""
+        return {n: p.decode_ms_1 / 1000.0
+                for n, p in self.calibrated_node_profiles().items()}
+
+
+# --------------------------------------------------------------------------- #
+# Data-parallel pod construction
+# --------------------------------------------------------------------------- #
+
+
+def make_tp_pods(model_cfg, params, cfg: Optional[EngineConfig] = None, *,
+                 n_pods: int = 1, tp: int = 1, devices=None
+                 ) -> Dict[int, InferenceEngine]:
+    """Build ``n_pods`` data-parallel serving pods, each a ``tp``-way
+    tensor-parallel :class:`InferenceEngine` on its own **disjoint**
+    single-axis ``("model",)`` mesh — the live-cluster topology the
+    frontend's placement policies drive (each pod registers as one node in
+    ``GlobalState``; no collective ever crosses pods).
+
+    One host copy of ``params`` is device_put onto every pod's mesh.
+    ``tp=1`` pods are plain single-device engines (no mesh, no collective
+    overhead)."""
+    if tp <= 1:
+        return {n: InferenceEngine(model_cfg, params, cfg)
+                for n in range(n_pods)}
+    from repro.launch.mesh import make_mesh
+    devices = list(jax.devices() if devices is None else devices)
+    need = n_pods * tp
+    if len(devices) < need:
+        raise RuntimeError(
+            f"{n_pods} pods x TP={tp} need {need} devices, have "
+            f"{len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    return {
+        n: InferenceEngine(
+            model_cfg, params, cfg,
+            mesh=make_mesh((tp,), ("model",),
+                           devices=devices[n * tp:(n + 1) * tp]))
+        for n in range(n_pods)
+    }

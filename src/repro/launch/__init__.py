@@ -4,7 +4,9 @@ from repro.launch.mesh import (
     ICI_BW,
     PEAK_FLOPS_BF16,
     batch_axes,
+    make_mesh,
     make_production_mesh,
+    pod_meshes,
 )
 from repro.launch.shapes import LONG_CONTEXT_WINDOW, SHAPES, InputShape, input_specs, supported
 
@@ -17,6 +19,8 @@ __all__ = [
     "SHAPES",
     "batch_axes",
     "input_specs",
+    "make_mesh",
     "make_production_mesh",
+    "pod_meshes",
     "supported",
 ]

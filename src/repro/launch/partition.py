@@ -118,6 +118,11 @@ def cache_pspecs(cfg, abstract_cache, batch_ax,
     qwen1.5-32b: 5.5 TB of KV → 364 GB/device).  The baseline then shards the
     *sequence* axis on "model" instead (sequence-parallel KV, what TPU
     serving stacks do for MHA-KV models).
+
+    ``kv_shard``: "auto" (heads when divisible, else seq), "seq",
+    "head_dim", or "heads" (always the head axis — small serving meshes,
+    where ``sanitize_specs`` replicates an indivisible head axis instead of
+    paying the seq-shard's scattered ring-buffer writes).
     """
     heads_fit = cfg.n_kv_heads > 0 and cfg.n_kv_heads % model_size == 0
 
@@ -230,3 +235,29 @@ def shardings(mesh, spec_tree):
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def engine_shardings(mesh, cfg, params, cache
+                     ) -> Tuple[Any, Any, NamedSharding]:
+    """Sharding trees for a tensor-parallel :class:`InferenceEngine`.
+
+    Returns ``(param_shardings, cache_shardings, replicated)`` for serving
+    on ``mesh``: parameters follow the baseline TP rules, the slot cache
+    keeps slots **replicated** (``batch_ax=None`` — every device sees every
+    slot, so the host-side slot bookkeeping stays sharding-oblivious) with
+    KV heads / recurrent state on the "model" axis.  ``kv_shard="heads"``
+    pins head-axis KV sharding; when ``n_kv_heads`` does not divide the
+    model-axis size, ``sanitize_specs`` replicates that axis (small serving
+    meshes prefer replicated KV over the 32k-context seq-shard fallback).
+    The cache tree's NamedShardings are shape-agnostic on the slot axis, so
+    one tree serves both the persistent ``max_slots`` cache and every
+    bucketed prefill sub-cache."""
+    model_size = int(dict(zip(mesh.axis_names, mesh.devices.shape))["model"])
+    pspec = sanitize_specs(mesh, param_pspecs(cfg, params), params)
+    cspec = sanitize_specs(
+        mesh,
+        cache_pspecs(cfg, cache, None, model_size=model_size,
+                     kv_shard="heads"),
+        cache)
+    return (shardings(mesh, pspec), shardings(mesh, cspec),
+            NamedSharding(mesh, P()))

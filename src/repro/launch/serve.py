@@ -40,7 +40,12 @@ from repro.data.workload import (
     build_scale_workload,
     scale_workload_requests,
 )
-from repro.engine import EngineConfig, EngineExecutor, InferenceEngine
+from repro.engine import (
+    EngineConfig,
+    EngineExecutor,
+    InferenceEngine,
+    make_tp_pods,
+)
 from repro.models import init_params
 from repro.models.encoder import EncoderArchConfig
 from repro.training import latest_step, restore_checkpoint
@@ -84,6 +89,31 @@ def load_requests(args):
     return reqs, {}
 
 
+def probe_node_costs(executor, reps: int):
+    """Fit per-pod token costs live before serving: run ``reps`` probe
+    windows per (batch, window) cell on every pod and least-squares the
+    measurements (``calibrated_node_profiles``).  The first window of each
+    shape pays XLA compile and is dropped by the fit — probing doubles as
+    warmup, so serving never pays those compiles mid-traffic."""
+    from repro.core.job import Job
+
+    jid = 10 ** 9  # out of any real request-id range
+    for node, eng in executor.engines.items():
+        batches = sorted({1, min(2, eng.cfg.max_slots)})
+        for _ in range(reps + 1):  # +1: the dropped compile window
+            for batch in batches:
+                for window in (4, 16):
+                    jobs = [Job(job_id=jid + i, prompt="probe",
+                                prompt_tokens=[7, 8, 9, 10],
+                                arrival_time=0.0)
+                            for i in range(batch)]
+                    executor.execute(node, jobs, window, now=0.0)
+                    for j in jobs:
+                        executor.evict(node, j)
+    costs = executor.node_token_cost()
+    return costs
+
+
 def build_predictor(args):
     if args.predictor == "oracle":
         base = OraclePredictor()
@@ -117,12 +147,25 @@ def main() -> None:
     ap.add_argument("--predictor-ckpt", default=None,
                     help="restore a trained BGE predictor (train_predictor.py)")
     ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard the serving fleet over a DxM data×model "
+                         "device mesh: D tensor-parallel pods of M devices "
+                         "each (supersedes --workers; needs D*M devices — "
+                         "on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--pods", type=int, default=None,
+                    help="with --mesh DxM: use only the first N of the D "
+                         "data rows as live pods (default: all D)")
     ap.add_argument("--placement", default="least_jobs",
                     choices=sorted(PLACEMENTS),
                     help="cluster placement policy consulted at arrival "
                          "(prediction-aware modes need a length predictor; "
-                         "least_eta assumes uniform worker speed here — the "
-                         "simulator wires calibrated per-node token costs)")
+                         "least_eta uses per-pod token costs fitted by "
+                         "--probe-nodes, else assumes uniform speed)")
+    ap.add_argument("--probe-nodes", type=int, default=0, metavar="REPS",
+                    help="before serving, run REPS calibration windows per "
+                         "pod and fit per-node token costs from the live "
+                         "measurements (wired into least_eta placement)")
     ap.add_argument("--rebalance", action="store_true",
                     help="steal queued jobs across workers when the "
                          "predicted-work imbalance exceeds the threshold")
@@ -158,15 +201,28 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    print(f"[serve] {args.workers} worker(s) x {args.slots} slots, "
-          f"{cfg.arch_id}, policy={args.policy}", file=sys.stderr)
+    ecfg = EngineConfig(
+        max_slots=args.slots, max_len=512, max_output=args.max_output,
+        eos_id=-1, respect_job_max=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engines = {
-        n: InferenceEngine(cfg, params, EngineConfig(
-            max_slots=args.slots, max_len=512, max_output=args.max_output,
-            eos_id=-1, respect_job_max=True))
-        for n in range(args.workers)
-    }
+    if args.mesh:
+        try:
+            d, m = (int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            sys.exit(f"--mesh wants DxM (e.g. 2x4), got {args.mesh!r}")
+        n_pods = args.pods if args.pods is not None else d
+        if not 1 <= n_pods <= d:
+            sys.exit(f"--pods {n_pods} outside the mesh's {d} data rows")
+        args.workers = n_pods
+        engines = make_tp_pods(cfg, params, ecfg, n_pods=n_pods, tp=m)
+        print(f"[serve] {n_pods} TP={m} pod(s) x {args.slots} slots over "
+              f"{n_pods * m}/{len(jax.devices())} devices, {cfg.arch_id}, "
+              f"policy={args.policy}", file=sys.stderr)
+    else:
+        engines = {n: InferenceEngine(cfg, params, ecfg)
+                   for n in range(args.workers)}
+        print(f"[serve] {args.workers} worker(s) x {args.slots} slots, "
+              f"{cfg.arch_id}, policy={args.policy}", file=sys.stderr)
     # prediction-aware placement / rebalancing consume length predictions
     # even when the ordering policy (fcfs/mlfq) does not; rebalancing is
     # meaningful only across workers
@@ -177,6 +233,15 @@ def main() -> None:
                        or args.placement != "least_jobs"
                        or (args.rebalance and args.workers > 1))
     predictor = build_predictor(args) if needs_predictor else None
+    executor = EngineExecutor(engines)
+    node_token_cost = None
+    if args.probe_nodes > 0:
+        node_token_cost = probe_node_costs(executor, args.probe_nodes)
+        executor.window_log.clear()  # probe windows are not served traffic
+        print("[serve] probed node token costs: "
+              + "  ".join(f"{n}={c * 1000:.2f}ms/tok"
+                          for n, c in sorted(node_token_cost.items())),
+              file=sys.stderr)
     server = ElisServer(
         FrontendConfig(
             n_nodes=args.workers,
@@ -186,6 +251,7 @@ def main() -> None:
                                       risk_quantile=args.risk_quantile),
             preemption=PreemptionConfig(enabled=not args.no_preemption),
             placement=args.placement,
+            node_token_cost=node_token_cost,
             rebalance=args.rebalance,
             rebalance_threshold=args.rebalance_threshold,
             # the live engine only reveals a request's length at finish —
@@ -194,7 +260,7 @@ def main() -> None:
             observe_in_flight=False,
         ),
         predictor,
-        EngineExecutor(engines),
+        executor,
     )
     requests, slo_targets = load_requests(args)
     for r in requests:
@@ -224,12 +290,20 @@ def main() -> None:
           f"({len(finished)}/{len(responses)} finished)", file=sys.stderr)
     if args.scenario:
         tenants = summarize_by_tenant(finished, slo_targets)
+        # expiry is a per-tenant outcome (deadline-heavy agent traffic):
+        # count over ALL responses — expired ones never reach `finished`
+        submitted, expired = {}, {}
+        for r in responses:
+            submitted[r.tenant] = submitted.get(r.tenant, 0) + 1
+            if r.status.value == "expired":
+                expired[r.tenant] = expired.get(r.tenant, 0) + 1
         for t, tm in sorted(tenants.items()):
             slo = (f"  slo_attainment {tm['slo_attainment']:.2f}"
                    if "slo_attainment" in tm else "")
+            exp = expired.get(t, 0) / max(submitted.get(t, 0), 1)
             print(f"[serve]   tenant={t:<12} n={tm['n']:<5} mean JCT "
                   f"{tm['jct_mean']:.2f}s  p99 {tm['jct_p99']:.2f}s"
-                  f"{slo}", file=sys.stderr)
+                  f"{slo}  expiry_rate {exp:.2f}", file=sys.stderr)
         fair = fairness_ratio(
             {t: tm["jct_mean"] for t, tm in tenants.items()})
         print(f"[serve]   fairness(max/min mean JCT) {fair:.2f}",

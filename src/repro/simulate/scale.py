@@ -86,13 +86,21 @@ _PREDICTORS = ("oracle", "noisy_oracle")
 _VECTOR_CUTOVER = 64
 
 
+def _resolve_profile(p) -> ModelProfile:
+    """Registry name or a ModelProfile instance (live-calibrated fits)."""
+    return p if isinstance(p, ModelProfile) else PROFILES[p]
+
+
 @dataclass
 class ScaleSimConfig:
     """Configuration of one fast-path run (mirrors the exact loop's
     ``ExperimentConfig``/``FrontendConfig`` surface for the supported
     subset)."""
 
-    model: str = "vic"
+    #: profile name in ``PROFILES`` — or a :class:`ModelProfile` instance
+    #: (live-calibrated fits from ``EngineExecutor.calibrated_profile()``
+    #: plug in directly; the live↔sim loop never round-trips a registry)
+    model: object = "vic"
     policy: str = "isrtf"            # fcfs | sjf | isrtf
     predictor: str = "oracle"        # oracle | noisy_oracle
     n_nodes: int = 1
@@ -104,8 +112,12 @@ class ScaleSimConfig:
     placement: str = "least_jobs"
     seed: int = 0
     hw_speedup: float = 1.0
-    #: heterogeneous clusters: node id -> profile name (others run ``model``)
-    node_profiles: Optional[Dict[int, str]] = None
+    #: heterogeneous clusters: node id -> profile name or ModelProfile
+    #: instance (others run ``model``)
+    node_profiles: Optional[Dict[int, object]] = None
+    #: per-window scheduling overhead [s]; None = the paper-calibrated
+    #: ``SCHED_OVERHEAD_MS`` (live replays pass the fitted intercept)
+    sched_overhead_s: Optional[float] = None
     #: systematic multiplicative mis-calibration of the noisy oracle
     predictor_bias: float = 1.0
     #: window coalescing on idle-queue nodes; auto-disabled whenever it
@@ -116,11 +128,12 @@ class ScaleSimConfig:
 
     # ------------------------------------------------------------------ #
     def validate(self) -> None:
-        if self.model not in PROFILES:
+        if (not isinstance(self.model, ModelProfile)
+                and self.model not in PROFILES):
             raise ValueError(f"unknown model {self.model!r} "
                              f"(have {sorted(PROFILES)})")
         for node, name in (self.node_profiles or {}).items():
-            if name not in PROFILES:
+            if not isinstance(name, ModelProfile) and name not in PROFILES:
                 raise ValueError(f"unknown profile {name!r} for node {node} "
                                  f"(have {sorted(PROFILES)})")
         if self.policy not in _POLICIES:
@@ -144,8 +157,8 @@ class ScaleSimConfig:
     def profiles(self) -> List[ModelProfile]:
         """Per-node calibrated profiles (scaled by ``hw_speedup``)."""
         over = self.node_profiles or {}
-        return [PROFILES[over.get(n, self.model)].scaled(self.hw_speedup)
-                for n in range(self.n_nodes)]
+        return [_resolve_profile(over.get(n, self.model))
+                .scaled(self.hw_speedup) for n in range(self.n_nodes)]
 
 
 @dataclass
@@ -180,6 +193,17 @@ class ScaleResult:
         out: Dict[str, object] = g.summarize()
         out["tenants"] = {t: s.summarize()
                           for t, s in sorted(self.tenant_summaries.items())}
+        # deadline-heavy scenarios (agent): expiry is a per-tenant outcome —
+        # streamed summaries only see *finished* jobs, so count from the
+        # lifecycle arrays
+        tid = self.workload.tenant_id
+        for ti, t in enumerate(self.workload.tenants):
+            mask = tid == ti
+            n_t = int(mask.sum())
+            if n_t and t in out["tenants"]:
+                out["tenants"][t]["n_submitted"] = n_t
+                out["tenants"][t]["expiry_rate"] = round(
+                    float((self.state[mask] == EXPIRED).sum()) / n_t, 4)
         out["fairness_jct"] = fairness_ratio(
             {t: s.sketch.mean for t, s in self.tenant_summaries.items()})
         out["n_finished"] = int((self.state == FINISHED).sum())
@@ -234,7 +258,8 @@ class ScaleSimulator:
         refresh_work = track_work and self._predicts_length
         placement = cfg.placement
         coalesce = self._coalesce
-        overhead = SCHED_OVERHEAD_MS / 1000.0
+        overhead = (cfg.sched_overhead_s if cfg.sched_overhead_s is not None
+                    else SCHED_OVERHEAD_MS / 1000.0)
         INF = math.inf
 
         arrival = np.ascontiguousarray(w.arrival, dtype=np.float64)
@@ -733,12 +758,14 @@ def run_exact_reference(cfg: ScaleSimConfig, w: ScaleWorkload) -> ExactResult:
 
     cfg.validate()
     profs = cfg.profiles()
-    base = PROFILES[cfg.model].scaled(cfg.hw_speedup)
+    base = _resolve_profile(cfg.model).scaled(cfg.hw_speedup)
     node_profiles = None
     if cfg.node_profiles:
-        node_profiles = {n: PROFILES[name].scaled(cfg.hw_speedup)
+        node_profiles = {n: _resolve_profile(name).scaled(cfg.hw_speedup)
                          for n, name in cfg.node_profiles.items()}
-    executor = SimExecutor(profile=base, node_profiles=node_profiles)
+    kw = ({} if cfg.sched_overhead_s is None
+          else {"sched_overhead_s": cfg.sched_overhead_s})
+    executor = SimExecutor(profile=base, node_profiles=node_profiles, **kw)
     predictor = make_predictor(cfg.predictor, seed=cfg.seed + 1,
                                bias=cfg.predictor_bias)
     fcfg = FrontendConfig(
