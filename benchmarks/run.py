@@ -31,6 +31,7 @@ def main() -> None:
         multi_device,
         multi_node,
         predictor_calibration,
+        prefill_preempt,
         roofline,
         scheduler_overhead,
         sim_scale,
@@ -89,6 +90,14 @@ def main() -> None:
              + ";eta_jct_s=" + str(next(
                  r["jct_mean_s"] for r in rows
                  if r.get("placement") == "least_eta")))),
+        ("prefill_preempt", prefill_preempt.run,
+         lambda rows: "chunk_jct_ratio=" + str(min(
+             r["jct_vs_unchunked"] for r in rows
+             if r["regime"] == "mixed_prompts"
+             and r["prefill_chunk"] is not None))
+         + ";auto_vs_recompute=" + str(min(
+             r["jct_vs_recompute"] for r in rows
+             if r.get("preempt_policy") == "auto"))),
         ("sim_scale", sim_scale.run,
          lambda rows: f"requests_per_s={rows[0]['requests_per_s']};"
                       f"peak_rss_mb={rows[0]['peak_rss_mb']};"

@@ -29,6 +29,7 @@ from repro.core.predictor import (
     wrap_calibration,
 )
 from repro.core.scheduler import (
+    PREEMPT_POLICIES,
     PreemptionConfig,
     PriorityBuffer,
     SchedulerConfig,
@@ -77,6 +78,7 @@ __all__ = [
     "NoisyOraclePredictor",
     "OraclePredictor",
     "PLACEMENTS",
+    "PREEMPT_POLICIES",
     "PlacementPolicy",
     "PredictorConfig",
     "PreemptionConfig",

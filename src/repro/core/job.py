@@ -65,6 +65,12 @@ class Job:
 
     generated: List[int] = field(default_factory=list)
     finished: bool = False
+    #: tokens of context currently materialised in the backend's KV cache
+    #: for this job (prompt + generated).  Mid-chunked-prefill it lags
+    #: ``len(prompt_tokens)``; a recompute-eviction resets it to 0 while a
+    #: KV swap-out preserves it.  ``prefill_debt`` (scheduler) and the
+    #: swap-vs-recompute break-even both read this cursor.
+    prefilled_tokens: int = 0
 
     # request-lifecycle fields (populated from api.RequestOptions)
     #: absolute deadline on the serving clock; None = no deadline

@@ -333,11 +333,18 @@ class StreamingSummary:
 
 def fairness_ratio(values: Dict[str, float]) -> float:
     """Max/min ratio across per-tenant metric values (1.0 = perfectly
-    fair); 0.0 when fewer than two tenants have data."""
-    vals = [v for v in values.values() if v > 0]
+    fair); 0.0 when fewer than two tenants have data.  A tenant sitting
+    at exactly 0 (a degenerate zero mean JCT — e.g. every request
+    finished within clock resolution) alongside a non-zero tenant is
+    maximal unfairness by this ratio: reported as ``inf`` rather than
+    tripping a ZeroDivisionError."""
+    vals = [v for v in values.values() if v >= 0]
     if len(vals) < 2:
         return 0.0
-    return max(vals) / min(vals)
+    lo, hi = min(vals), max(vals)
+    if lo == 0.0:
+        return float("inf") if hi > 0.0 else 0.0
+    return hi / lo
 
 
 def summarize_by_tenant(jobs: Sequence, slo_targets: Optional[Dict[str, float]]

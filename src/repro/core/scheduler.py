@@ -69,6 +69,15 @@ class SchedulerConfig:
     #: re-predict (ISRTF) are affected; newly arrived jobs are always
     #: scored on first sight regardless of the stride.
     repredict_every: int = 1
+    #: chunked prefill: split prompt ingestion into chunks of this many
+    #: tokens, at most one chunk per scheduling window, interleaved with
+    #: the running decodes (Sarathi-style stall removal — a long prompt no
+    #: longer freezes every decode for a full window).  None = one-shot
+    #: prefill (the pre-chunking behaviour, bit-compatible).  When set,
+    #: ISRTF ranks partially-prefilled jobs by *total* remaining work:
+    #: predicted remaining output plus the unprefilled prompt tail
+    #: (:func:`prefill_debt`).
+    prefill_chunk: Optional[int] = None
 
 
 class Policy:
@@ -177,6 +186,21 @@ def effective_priority(cfg: SchedulerConfig, job: Job, raw: float,
     return eff
 
 
+def prefill_debt(cfg: SchedulerConfig, job: Job) -> float:
+    """Context tokens the backend still has to materialise before ``job``
+    can decode: ``prompt + generated - prefilled``.  Zero whenever chunked
+    prefill is off (``cfg.prefill_chunk is None``) so legacy traces are
+    untouched; with chunking on, this is the unprefilled prompt tail for a
+    mid-prefill job and the full context for a recompute-evicted one.
+    Added to the *raw* priority at ranking time (never stored in
+    ``job.priority`` — predictions stay pure remaining-output estimates)."""
+    if cfg.prefill_chunk is None:
+        return 0.0
+    return float(max(
+        len(job.prompt_tokens) + job.tokens_generated - job.prefilled_tokens,
+        0))
+
+
 def score_jobs(policy: Policy, jobs: Sequence[Job], now: float) -> List[float]:
     """Fresh raw priorities for ``jobs`` — at most ONE predictor dispatch
     (batched through :func:`~repro.core.predictor.predict_lengths`, the
@@ -275,7 +299,8 @@ def score_pool(policy: Policy, running: Sequence[Job], waiting: Sequence[Job],
                      for j, p in zip(fresh, score_jobs(policy, fresh, now))}
         raw = [fresh_raw[id(j)] if id(j) in fresh_raw
                else cached_raw_priority(j) for j in pool]
-    eff = [effective_priority(policy.cfg, j, p, now)
+    eff = [effective_priority(policy.cfg, j, p + prefill_debt(policy.cfg, j),
+                              now)
            for j, p in zip(pool, raw)]
     return eff[: len(running)], eff[len(running):]
 
@@ -323,6 +348,43 @@ class PreemptionConfig:
     #: per-preemption cost charged when the victim resumes (KV recompute),
     #: expressed in prompt-tokens re-prefilled
     recompute_tokens: bool = True
+    #: what happens to a victim's KV cache (ALISE, arXiv 2410.23537):
+    #: ``recompute`` discards it (resume pays a full re-prefill — the
+    #: pre-offload behaviour), ``swap`` copies it to host memory and back,
+    #: ``auto`` picks per victim via the :func:`decide_preempt` break-even
+    #: on the backend's (swap_s, recompute_s) estimates and the victim's
+    #: predicted remaining length
+    policy: str = "recompute"
+    #: ``auto`` penalty per predicted-remaining token for *holding* a
+    #: swapped cache in host memory — a job expected to run long after
+    #: resume ties up host KV (and risks a second swap) longer, so the
+    #: break-even tilts toward recompute for it
+    swap_hold_s_per_token: float = 1e-3
+
+
+PREEMPT_POLICIES = ("recompute", "swap", "auto")
+
+
+def decide_preempt(cfg: PreemptionConfig,
+                   costs: Optional[Tuple[float, float]],
+                   predicted_remaining: Optional[float]) -> str:
+    """Resolve a victim's preemption treatment to ``"swap"`` or
+    ``"recompute"``.  ``costs`` is the backend's ``(swap_round_trip_s,
+    recompute_s)`` estimate (None = backend can't price it → recompute);
+    ``predicted_remaining`` feeds the hold-cost term under ``auto``."""
+    if cfg.policy not in PREEMPT_POLICIES:
+        raise ValueError(
+            f"unknown preempt policy {cfg.policy!r}; "
+            f"choose one of {PREEMPT_POLICIES}")
+    if cfg.policy != "auto":
+        return cfg.policy
+    if costs is None:
+        return "recompute"
+    swap_s, rec_s = costs
+    r_hat = max(float(predicted_remaining or 0.0), 0.0)
+    return ("swap"
+            if swap_s + cfg.swap_hold_s_per_token * r_hat < rec_s
+            else "recompute")
 
 
 def select_fills(waiting_eff: Sequence[float], free: int) -> List[int]:

@@ -218,6 +218,32 @@ class InferenceEngine:
         #: first generated token (sampled from prefill logits), pending emission
         self._pending_first: Dict[int, int] = {}
 
+        # ---- chunked prefill state (run_window(prefill_chunk=...)) ----
+        #: jitted chunk dispatches, one per padded chunk length
+        self._chunk_cache: Dict[int, object] = {}
+        #: job_id -> tokens already span-written into its slot's cache
+        self._prefill_cursor: Dict[int, int] = {}
+        #: job_id -> total tokens to prefill (prompt, or resume context)
+        self._chunk_target: Dict[int, int] = {}
+        #: job_id -> the full token stream being chunk-prefilled
+        self._chunk_tokens: Dict[int, List[int]] = {}
+        #: job_id -> True when the chunked prefill re-establishes a resumed
+        #: job's context (counts toward ``resume_context_tokens``)
+        self._chunk_resumed: Dict[int, bool] = {}
+        self.num_chunk_dispatches = 0
+        self._chunk_traces = 0
+        self._chunk_warned = False
+
+        # ---- KV offload tier (offload_job/restore_job) ----
+        #: job_id -> host-memory copy of the slot cache + decode bookkeeping
+        self._host_stash: Dict[int, Dict] = {}
+
+        #: tokens of context re-established by resume prefills (full or
+        #: chunked), INCLUDING the +1 seed token whose KV is written by the
+        #: first decode step — the live counterpart of the simulator's
+        #: recompute charge (``SimExecutor.recompute_prefill_tokens``)
+        self.resume_context_tokens = 0
+
     # ------------------------------------------------------------------ #
     def _canon_cache(self, cache):
         """Pin a cache pytree to the canonical NamedShardings (mesh mode).
@@ -252,6 +278,172 @@ class InferenceEngine:
         """Distinct decode batch sizes compaction can dispatch."""
         return len({min(batch_bucket(n), self.cfg.max_slots)
                     for n in range(1, self.cfg.max_slots + 1)})
+
+    # ------------------------------------------------------------------ #
+    # Chunked prefill
+    # ------------------------------------------------------------------ #
+
+    @property
+    def num_chunk_traces(self) -> int:
+        return self._chunk_traces
+
+    def chunk_supported(self) -> bool:
+        """Chunked prefill needs a position-addressable dense KV cache:
+        attention families only (recurrent state absorbs pads), no ring/SWA
+        buffer (span writes are position-destructive there), no int8 KV
+        (the chunk would attend a dequantized prefix while one-shot prefill
+        attends the fresh unquantized K/V)."""
+        if self.model_cfg.family not in T.CHUNKABLE_FAMILIES:
+            return False
+        kvc = self.cache.get("kv")
+        return kvc is not None and not kvc.ring and not kvc.quantized
+
+    def _chunk_fn(self, padded_len: int):
+        """jit per padded chunk length (start/valid stay traced, so the
+        whole prefill ladder reuses these few shapes)."""
+        if padded_len not in self._chunk_cache:
+            mc, ec = self.model_cfg, self.cfg
+
+            def fn(params, tokens, cache1, start, valid):
+                self._chunk_traces += 1  # side effect: once per shape
+                return T.prefill_chunk(params, mc, {"tokens": tokens}, cache1,
+                                       attn_impl=ec.attn_impl,
+                                       start=start, valid_len=valid)
+
+            if self.mesh is None:
+                self._chunk_cache[padded_len] = jax.jit(fn)
+            else:
+                self._chunk_cache[padded_len] = jax.jit(
+                    fn,
+                    in_shardings=(self._param_sh, self._repl, self._cache_sh,
+                                  self._repl, self._repl),
+                    out_shardings=(self._repl, self._cache_sh))
+        return self._chunk_cache[padded_len]
+
+    def _alloc_slot(self, job: Job) -> int:
+        """Claim a slot WITHOUT prefilling (chunked admission): the slot's
+        ``len`` is zeroed and the prompt is span-written chunk by chunk
+        across subsequent windows (stale K/V from a previous occupant is
+        dead weight behind the kv_len mask, exactly as after a one-shot
+        scatter)."""
+        free = [s for s, owner in enumerate(self.slot_job) if owner is None]
+        if not free:
+            raise RuntimeError("no free slot to allocate")
+        slot = free[0]
+        toks = self._resume_tokens(job)
+        if len(toks) > self.cfg.max_len:
+            raise ValueError(
+                f"prompt of {len(toks)} tokens exceeds max_len="
+                f"{self.cfg.max_len}")
+        self.slot_job[slot] = job.job_id
+        self.slot_of[job.job_id] = slot
+        self.last_token[slot, 0] = PAD_ID
+        self._prefill_cursor[job.job_id] = 0
+        self._chunk_target[job.job_id] = len(toks)
+        self._chunk_tokens[job.job_id] = toks
+        self._chunk_resumed[job.job_id] = bool(job.generated)
+        lens = np.asarray(self.cache["len"]).copy()
+        lens[slot] = 0
+        self.cache["len"] = jnp.asarray(lens)
+        return slot
+
+    def prefill_incomplete(self, job_id: int) -> bool:
+        """True while a chunk-admitted job still has prompt tokens to
+        ingest — such a job is excluded from decode dispatches."""
+        cur = self._prefill_cursor.get(job_id)
+        return cur is not None and cur < self._chunk_target[job_id]
+
+    def _run_chunk(self, job: Job, chunk: int) -> None:
+        """Ingest the next (at most) ``chunk`` prompt tokens of ``job`` in
+        one batch-1 dispatch against its slot's partially-filled cache."""
+        jid = job.job_id
+        toks_all = self._chunk_tokens[jid]
+        cur = self._prefill_cursor[jid]
+        target = self._chunk_target[jid]
+        n = min(chunk, target - cur)
+        padded = seq_bucket(n, self.cfg.max_len,
+                            min_bucket=self.cfg.prefill_bucket)
+        toks = np.full((1, padded), PAD_ID, np.int32)
+        toks[0, :n] = toks_all[cur:cur + n]
+        slot = self.slot_of[jid]
+        sub = self._canon_cache(
+            _gather_slots(self.cache, jnp.asarray([slot], jnp.int32)))
+        self.num_chunk_dispatches += 1
+        logits, sub = self._chunk_fn(padded)(
+            self.params, jnp.asarray(toks), sub,
+            jnp.asarray([cur], jnp.int32), jnp.asarray([n], jnp.int32))
+        self.cache = self._canon_cache(
+            _scatter_slots(self.cache, sub, [slot], 1))
+        self._prefill_cursor[jid] = cur + n
+        if self._chunk_resumed[jid]:
+            self.resume_context_tokens += n
+        if cur + n >= target:
+            # prefill complete: seed decode exactly like one-shot admission
+            if job.generated:
+                self.last_token[slot, 0] = job.generated[-1]
+                self.resume_context_tokens += 1  # the seed token's KV write
+            else:
+                first = int(np.argmax(np.asarray(logits)[0, -1]))
+                self._pending_first[jid] = first
+                self.last_token[slot, 0] = first
+
+    # ------------------------------------------------------------------ #
+    # KV offload tier
+    # ------------------------------------------------------------------ #
+
+    def offload_job(self, job_id: int) -> bool:
+        """Evict a job's slot but keep its KV/state in HOST memory — resume
+        swaps it back in instead of paying recompute.  ``jax.device_get``
+        pulls every shard to host under a mesh; the stash also carries the
+        decode bookkeeping (last token, pending first emission, chunk
+        cursor) so a restored job continues bit-exactly."""
+        slot = self.slot_of.get(job_id)
+        if slot is None:
+            return False
+        sub = _gather_slots(self.cache, jnp.asarray([slot], jnp.int32))
+        self._host_stash[job_id] = {
+            "cache": jax.device_get(sub),
+            "last": int(self.last_token[slot, 0]),
+            "pending": self._pending_first.get(job_id),
+            "cursor": self._prefill_cursor.get(job_id),
+            "target": self._chunk_target.get(job_id),
+            "tokens": self._chunk_tokens.get(job_id),
+            "resumed": self._chunk_resumed.get(job_id),
+        }
+        self.evict_job(job_id)
+        return True
+
+    def restore_job(self, job: Job) -> int:
+        """Swap a host-stashed job back into a free slot, bit-exactly."""
+        st = self._host_stash.pop(job.job_id)
+        free = [s for s, owner in enumerate(self.slot_job) if owner is None]
+        if not free:
+            raise RuntimeError("no free slot to restore into")
+        slot = free[0]
+        sub = jax.device_put(st["cache"])
+        if self.mesh is not None:
+            sub = self._canon_cache(sub)
+        self.cache = self._canon_cache(
+            _scatter_slots(self.cache, sub, [slot], 1))
+        self.slot_job[slot] = job.job_id
+        self.slot_of[job.job_id] = slot
+        self.last_token[slot, 0] = st["last"]
+        if st["pending"] is not None:
+            self._pending_first[job.job_id] = st["pending"]
+        if st["cursor"] is not None:
+            self._prefill_cursor[job.job_id] = st["cursor"]
+            self._chunk_target[job.job_id] = st["target"]
+            self._chunk_tokens[job.job_id] = st["tokens"]
+            self._chunk_resumed[job.job_id] = st["resumed"]
+        return slot
+
+    def has_stash(self, job_id: int) -> bool:
+        return job_id in self._host_stash
+
+    def drop_stash(self, job_id: int) -> None:
+        """Release a job's host-memory KV copy (terminal states, or a
+        migration that abandons the cache)."""
+        self._host_stash.pop(job_id, None)
 
     # ------------------------------------------------------------------ #
     def _decode_window(self, window: int, batch: int):
@@ -388,6 +580,9 @@ class InferenceEngine:
             self.slot_of[job.job_id] = slot
             if job.generated:
                 self.last_token[slot, 0] = job.generated[-1]
+                # resume recomputes prompt + generated[:-1], and the seed
+                # token's KV is written by the first decode step (+1)
+                self.resume_context_tokens += true_lens[i] + 1
             else:
                 first = int(np.argmax(logits_np[i, -1]))
                 self._pending_first[job.job_id] = first
@@ -397,18 +592,82 @@ class InferenceEngine:
     def evict_job(self, job_id: int) -> None:
         slot = self.slot_of.pop(job_id, None)
         self._pending_first.pop(job_id, None)
+        self._prefill_cursor.pop(job_id, None)
+        self._chunk_target.pop(job_id, None)
+        self._chunk_tokens.pop(job_id, None)
+        self._chunk_resumed.pop(job_id, None)
         if slot is not None:
             self.slot_job[slot] = None
             self.last_token[slot, 0] = PAD_ID
 
     # ------------------------------------------------------------------ #
-    def run_window(self, jobs: Sequence[Job], window: int) -> Tuple[List[List[int]], List[bool]]:
+    def run_window(self, jobs: Sequence[Job], window: int,
+                   prefill_chunk: Optional[int] = None
+                   ) -> Tuple[List[List[int]], List[bool]]:
         """Execute K decode steps for ``jobs`` (admitting any that lack a
         slot via one batched prefill).  Returns
-        (new_tokens_per_job, finished_per_job)."""
+        (new_tokens_per_job, finished_per_job).
+
+        With ``prefill_chunk`` set (and the family supporting it — see
+        :meth:`chunk_supported`), admission becomes *chunked*: new jobs
+        claim a slot without prefilling, at most ONE job per window (the
+        first incomplete one in batch order) ingests one ``prefill_chunk``-
+        sized piece of its prompt, and only fully-prefilled jobs join the
+        decode dispatch — a job completing its final chunk in window W
+        begins decoding in window W+1.  Mid-prefill jobs emit no tokens.
+        Unsupported families fall back loudly to one-shot prefill."""
         if not jobs:
             return [], []
-        self.add_jobs(jobs)
+        # swap-in: batch members with a host-stashed cache restore it
+        # instead of paying recompute (KV offload tier)
+        for job in jobs:
+            if not self.has_job(job.job_id) and self.has_stash(job.job_id):
+                self.restore_job(job)
+        chunked = prefill_chunk is not None
+        if chunked and not self.chunk_supported():
+            if not self._chunk_warned:
+                warnings.warn(
+                    f"prefill_chunk is not supported for "
+                    f"family={self.model_cfg.family!r} with this cache "
+                    "(ring/quantized KV or recurrent state); falling back "
+                    "to one-shot prefill", UserWarning, stacklevel=2)
+                self._chunk_warned = True
+            chunked = False
+        if chunked:
+            for job in jobs:
+                if not self.has_job(job.job_id):
+                    self._alloc_slot(job)
+            # decode eligibility is decided BEFORE the chunk runs: the job
+            # completing its final chunk this window decodes next window
+            incomplete = [j for j in jobs
+                          if self.prefill_incomplete(j.job_id)]
+            decode_jobs = [j for j in jobs
+                           if not self.prefill_incomplete(j.job_id)]
+            if incomplete:
+                self._run_chunk(incomplete[0], prefill_chunk)
+        else:
+            self.add_jobs(jobs)
+            decode_jobs = list(jobs)
+        results = {j.job_id: ([], False) for j in jobs}
+        if decode_jobs:
+            self._decode_jobs(decode_jobs, window, results)
+        out_tokens = [list(results[j.job_id][0]) for j in jobs]
+        finished = [results[j.job_id][1] for j in jobs]
+        # publish each job's materialized context (prompt + generated KV,
+        # incl. the seed token) — the scheduler's prefill-debt ranking and
+        # the swap-vs-recompute break-even read it
+        for job, seq in zip(jobs, out_tokens):
+            if self.prefill_incomplete(job.job_id):
+                job.prefilled_tokens = self._prefill_cursor[job.job_id]
+            else:
+                job.prefilled_tokens = (len(job.prompt_tokens)
+                                        + job.tokens_generated + len(seq))
+        return out_tokens, finished
+
+    def _decode_jobs(self, jobs: Sequence[Job], window: int,
+                     results: Dict[int, Tuple[List[int], bool]]) -> None:
+        """One masked/compacted decode dispatch for ``jobs`` (all holding
+        fully-prefilled slots); writes (tokens, finished) into ``results``."""
         slots = [self.slot_of[job.job_id] for job in jobs]
         prev_lens = np.asarray(self.cache["len"]).copy()
         ms = self.cfg.max_slots
@@ -450,8 +709,6 @@ class InferenceEngine:
                 _scatter_slots(self.cache, new_cache, order, len(order)))
         else:
             self.cache = new_cache
-        out_tokens: List[List[int]] = []
-        finished: List[bool] = []
         lens = np.asarray(self.cache["len"]).copy()
         for job in jobs:
             slot = self.slot_of[job.job_id]
@@ -482,15 +739,13 @@ class InferenceEngine:
                 seq = seq[:room]
                 consumed_scanned -= dropped
                 fin = True
-            out_tokens.append(seq)
-            finished.append(fin)
+            results[job.job_id] = (seq, fin)
             self.last_token[slot, 0] = seq[-1] if seq else PAD_ID
             # the cache pointer advances exactly one position per consumed
             # scan write — robust to both EOS freezing (which already
             # stopped advancing) and cap truncation (which did not)
             lens[slot] = prev_lens[slot] + max(consumed_scanned, 0)
         self.cache["len"] = jnp.asarray(lens)
-        return out_tokens, finished
 
 
 # --------------------------------------------------------------------------- #
@@ -507,9 +762,27 @@ class EngineExecutor(Backend):
     back onto the simulator's latency model so a live run can parameterise
     a :class:`repro.simulate.SimExecutor` (live↔sim calibration)."""
 
-    def __init__(self, engines: Dict[int, InferenceEngine]):
+    def __init__(self, engines: Dict[int, InferenceEngine], *,
+                 swap_bandwidth_bytes_s: float = 16e9,
+                 swap_latency_s: float = 0.0005):
         self.engines = engines
         self.window_log: List[Dict] = []
+        #: host<->device copy model for the swap-vs-recompute break-even
+        #: (``preempt_costs``) — the live copies themselves are measured
+        #: wall-clock, these parameterise only the *decision*
+        self.swap_bandwidth_bytes_s = swap_bandwidth_bytes_s
+        self.swap_latency_s = swap_latency_s
+        #: wall-clock seconds spent offloading per node since its last
+        #: window — folded into the next window's reported duration so swap
+        #: cost is attributed, not lost between windows
+        self._pending_swap_s: Dict[int, float] = {}
+        self.swapout_tokens = 0
+        self.swapin_tokens = 0
+        self.n_swapouts = 0
+        self.n_swapins = 0
+        #: per-node cached calibration fit for ``preempt_costs`` (refit
+        #: after every 32 new windows; None until enough data)
+        self._fit_cache: Dict[int, Tuple[int, object]] = {}
 
     def capacity(self, node: int) -> int:
         return self.engines[node].cfg.max_slots
@@ -518,7 +791,8 @@ class EngineExecutor(Backend):
         return self.engines[node].free_slots()
 
     def execute(self, node: int, jobs: Sequence[Job], window: int,
-                now: float) -> ExecResult:
+                now: float, prefill_chunk: Optional[int] = None
+                ) -> ExecResult:
         eng = self.engines[node]
         t0 = time.perf_counter()
         # capacity: evict nothing here — the frontend already chose the batch;
@@ -529,8 +803,14 @@ class EngineExecutor(Backend):
                 f"node {node}: batch needs {needed} free slots, "
                 f"engine has {eng.free_slots()}"
             )
-        tokens, finished = eng.run_window(jobs, window)
+        for j in jobs:
+            if eng.has_stash(j.job_id):
+                self.n_swapins += 1
+                self.swapin_tokens += j.prefilled_tokens
+        tokens, finished = eng.run_window(jobs, window,
+                                          prefill_chunk=prefill_chunk)
         dur = time.perf_counter() - t0
+        dur += self._pending_swap_s.pop(node, 0.0)
         self.window_log.append({
             "node": node, "batch": len(jobs), "window": window,
             "duration_s": dur, "tokens": sum(len(t) for t in tokens),
@@ -538,7 +818,72 @@ class EngineExecutor(Backend):
         return ExecResult(dur, tokens, finished)
 
     def evict(self, node: int, job: Job) -> None:
-        self.engines[node].evict_job(job.job_id)
+        eng = self.engines[node]
+        eng.drop_stash(job.job_id)
+        eng.evict_job(job.job_id)
+        job.prefilled_tokens = 0
+
+    # ------------------------------------------------------------------ #
+    # KV offload tier (Backend.offload / Backend.restore)
+    # ------------------------------------------------------------------ #
+
+    def offload(self, node: int, job: Job) -> bool:
+        """Swap the job's slot cache to host memory (preemption that keeps
+        the KV).  Wall-clock cost is accumulated into the node's next
+        window duration."""
+        eng = self.engines[node]
+        t0 = time.perf_counter()
+        ok = eng.offload_job(job.job_id)
+        if ok:
+            self._pending_swap_s[node] = (
+                self._pending_swap_s.get(node, 0.0)
+                + (time.perf_counter() - t0))
+            self.swapout_tokens += job.prefilled_tokens
+            self.n_swapouts += 1
+        return ok
+
+    def restore(self, node: int, job: Job) -> bool:
+        """Explicit swap-in (execute() also restores lazily)."""
+        eng = self.engines[node]
+        if not eng.has_stash(job.job_id):
+            return False
+        eng.restore_job(job)
+        return True
+
+    def preempt_costs(self, node: int, job: Job
+                      ) -> Optional[Tuple[float, float]]:
+        """(swap_round_trip_s, recompute_s) estimates for preempting
+        ``job`` — the ``auto`` :class:`PreemptPolicy` break-even input.
+        Swap cost: two host<->device copies of the job's KV footprint at
+        the configured bandwidth.  Recompute cost: the job's context
+        through the *calibrated* prefill rate (None until enough measured
+        windows exist — the caller then falls back to recompute)."""
+        n = job.prefilled_tokens
+        if n <= 0:
+            return None
+        eng = self.engines[node]
+        mc = eng.model_cfg
+        kv_bytes = (2 * mc.n_layers * (mc.n_kv_heads or mc.n_heads)
+                    * mc.head_dim * jnp.dtype(mc.dtype).itemsize)
+        swap_s = 2.0 * (self.swap_latency_s
+                        + n * kv_bytes / self.swap_bandwidth_bytes_s)
+        prof = self._cached_fit(node)
+        if prof is None:
+            return None
+        rec_s = prof.prefill_ms(1, n) / 1000.0
+        return swap_s, rec_s
+
+    def _cached_fit(self, node: int):
+        n_log = len(self.window_log)
+        cached = self._fit_cache.get(node)
+        if cached is not None and n_log - cached[0] < 32:
+            return cached[1]
+        try:
+            prof = self.calibrated_profile(nodes=[node])
+        except ValueError:
+            prof = None
+        self._fit_cache[node] = (n_log, prof)
+        return prof
 
     # ------------------------------------------------------------------ #
     def node_counters(self) -> Dict[int, Dict[str, int]]:
@@ -553,6 +898,9 @@ class EngineExecutor(Backend):
                 "prefill_dispatches": eng.num_prefill_dispatches,
                 "decode_traces": eng.num_decode_traces,
                 "decode_dispatches": eng.num_decode_dispatches,
+                "chunk_traces": eng.num_chunk_traces,
+                "chunk_dispatches": eng.num_chunk_dispatches,
+                "resume_context_tokens": eng.resume_context_tokens,
                 "windows_executed": windows.get(n, 0)}
             for n, eng in self.engines.items()
         }
@@ -563,10 +911,17 @@ class EngineExecutor(Backend):
         :meth:`node_counters` keeps the per-pod breakdown."""
         agg = {"prefill_traces": 0, "prefill_dispatches": 0,
                "decode_traces": 0, "decode_dispatches": 0,
-               "windows_executed": len(self.window_log)}
+               "chunk_traces": 0, "chunk_dispatches": 0,
+               "resume_context_tokens": 0,
+               "windows_executed": len(self.window_log),
+               "swapouts": self.n_swapouts, "swapins": self.n_swapins,
+               "swapout_tokens": self.swapout_tokens,
+               "swapin_tokens": self.swapin_tokens}
         for per in self.node_counters().values():
             for k in ("prefill_traces", "prefill_dispatches",
-                      "decode_traces", "decode_dispatches"):
+                      "decode_traces", "decode_dispatches",
+                      "chunk_traces", "chunk_dispatches",
+                      "resume_context_tokens"):
                 agg[k] += per[k]
         return agg
 
@@ -592,6 +947,11 @@ class EngineExecutor(Backend):
         from repro.simulate.profiles import (CALIBRATION_MEAN_TOKENS,
                                              ModelProfile)
         keep = set(self.engines if nodes is None else nodes)
+        unknown = keep - set(self.engines)
+        if unknown:
+            raise ValueError(
+                f"calibrated_profile: unknown node(s) {sorted(unknown)}; "
+                f"this executor drives nodes {sorted(self.engines)}")
         log = [rec for rec in self.window_log if rec["node"] in keep]
         seen = set()
         samples = []
@@ -604,7 +964,10 @@ class EngineExecutor(Backend):
         if not samples:
             samples = list(log)
         if not samples:
-            raise ValueError("no executed windows to calibrate from")
+            raise ValueError(
+                "calibrated_profile: window_log holds no executed windows "
+                f"for node(s) {sorted(keep)} — run at least one window via "
+                "execute() before calibrating")
         w = np.array([r["window"] for r in samples], float)
         b = np.array([r["batch"] for r in samples], float)
         d = np.array([r["duration_s"] for r in samples], float)

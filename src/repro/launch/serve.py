@@ -25,6 +25,7 @@ from repro.core import (
     FrontendConfig,
     OraclePredictor,
     PLACEMENTS,
+    PREEMPT_POLICIES,
     PredictorConfig,
     PreemptionConfig,
     Request,
@@ -49,6 +50,33 @@ from repro.engine import (
 from repro.models import init_params
 from repro.models.encoder import EncoderArchConfig
 from repro.training import latest_step, restore_checkpoint
+
+
+def parse_mesh(spec: str):
+    """Parse a ``--mesh`` shape string into ``(D, M)``.
+
+    The only accepted form is ``DxM`` — exactly two ``x``-separated
+    positive integers (e.g. ``2x4``).  Anything else (``2x``, ``2x3x4``,
+    ``ax4``, ``0x4``, ``2x-1``) raises :class:`ValueError` naming the
+    offending spec and the expected format, so a typo dies at launch
+    instead of materialising a mis-shaped device mesh.
+    """
+    parts = spec.lower().split("x")
+    if len(parts) != 2 or not all(p.strip() for p in parts):
+        raise ValueError(
+            f"--mesh wants exactly two 'x'-separated fields DxM "
+            f"(e.g. 2x4), got {spec!r}")
+    try:
+        d, m = (int(p) for p in parts)
+    except ValueError:
+        raise ValueError(
+            f"--mesh wants integer dimensions DxM (e.g. 2x4), "
+            f"got {spec!r}") from None
+    if d < 1 or m < 1:
+        raise ValueError(
+            f"--mesh dimensions must be positive integers DxM "
+            f"(e.g. 2x4), got {spec!r}")
+    return d, m
 
 
 def load_requests(args):
@@ -186,6 +214,25 @@ def main() -> None:
                          "the predicted remaining length instead of the "
                          "point estimate (e.g. 0.9 hedges against "
                          "underestimates)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    metavar="TOKENS",
+                    help="chunked prefill: ingest each prompt in chunks of "
+                         "this many tokens, at most one chunk per "
+                         "scheduling window, interleaved with decode "
+                         "(default: one-shot prefill)")
+    ap.add_argument("--preempt-policy", default="recompute",
+                    choices=list(PREEMPT_POLICIES),
+                    help="what preemption does to the victim's KV cache: "
+                         "recompute = evict and re-prefill on resume; "
+                         "swap = offload to host memory and restore; "
+                         "auto = per-victim break-even between the two on "
+                         "predicted remaining length")
+    ap.add_argument("--swap-bandwidth", type=float, default=16e9,
+                    metavar="BYTES_PER_S",
+                    help="host<->device KV transfer bandwidth the swap "
+                         "preemption tier is priced with")
+    ap.add_argument("--swap-latency", type=float, default=5e-4, metavar="S",
+                    help="fixed per-transfer latency of one KV swap leg")
     ap.add_argument("--max-output", type=int, default=32)
     ap.add_argument("--trace", default=None)
     ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
@@ -205,11 +252,13 @@ def main() -> None:
         max_slots=args.slots, max_len=512, max_output=args.max_output,
         eos_id=-1, respect_job_max=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.prefill_chunk is not None and args.prefill_chunk < 1:
+        sys.exit(f"--prefill-chunk must be >= 1, got {args.prefill_chunk}")
     if args.mesh:
         try:
-            d, m = (int(x) for x in args.mesh.lower().split("x"))
-        except ValueError:
-            sys.exit(f"--mesh wants DxM (e.g. 2x4), got {args.mesh!r}")
+            d, m = parse_mesh(args.mesh)
+        except ValueError as e:
+            sys.exit(str(e))
         n_pods = args.pods if args.pods is not None else d
         if not 1 <= n_pods <= d:
             sys.exit(f"--pods {n_pods} outside the mesh's {d} data rows")
@@ -233,7 +282,9 @@ def main() -> None:
                        or args.placement != "least_jobs"
                        or (args.rebalance and args.workers > 1))
     predictor = build_predictor(args) if needs_predictor else None
-    executor = EngineExecutor(engines)
+    executor = EngineExecutor(engines,
+                              swap_bandwidth_bytes_s=args.swap_bandwidth,
+                              swap_latency_s=args.swap_latency)
     node_token_cost = None
     if args.probe_nodes > 0:
         node_token_cost = probe_node_costs(executor, args.probe_nodes)
@@ -248,8 +299,10 @@ def main() -> None:
             scheduler=SchedulerConfig(policy=args.policy, window=args.window,
                                       batch_size=args.slots,
                                       repredict_every=args.repredict_every,
-                                      risk_quantile=args.risk_quantile),
-            preemption=PreemptionConfig(enabled=not args.no_preemption),
+                                      risk_quantile=args.risk_quantile,
+                                      prefill_chunk=args.prefill_chunk),
+            preemption=PreemptionConfig(enabled=not args.no_preemption,
+                                        policy=args.preempt_policy),
             placement=args.placement,
             node_token_cost=node_token_cost,
             rebalance=args.rebalance,
@@ -288,6 +341,13 @@ def main() -> None:
           f"placement={args.placement} "
           f"migrations={server.frontend.migrations}  "
           f"({len(finished)}/{len(responses)} finished)", file=sys.stderr)
+    ec = executor.counters()
+    if ec["chunk_dispatches"] or ec["swapouts"]:
+        print(f"[serve] chunk_dispatches={ec['chunk_dispatches']} "
+              f"(traces {ec['chunk_traces']})  "
+              f"swapouts={ec['swapouts']} swapins={ec['swapins']}  "
+              f"resume_prefill_tokens={ec['resume_context_tokens']}",
+              file=sys.stderr)
     if args.scenario:
         tenants = summarize_by_tenant(finished, slo_targets)
         # expiry is a per-tenant outcome (deadline-heavy agent traffic):

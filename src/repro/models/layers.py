@@ -80,6 +80,22 @@ def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
     return (q.astype(jnp.float32) * scale[..., None, None]).astype(dtype)
 
 
+def masked_span_write(buf: jnp.ndarray, start: jnp.ndarray, val: jnp.ndarray,
+                      valid_len: jnp.ndarray) -> jnp.ndarray:
+    """Write ``val`` (B, C, ...) into ``buf`` (B, L, ...) at rows
+    ``[start, start + valid_len)`` per batch element.  Positions beyond
+    ``valid_len`` (chunk padding) are dropped via out-of-bounds scatter
+    (``mode="drop"``), so the existing buffer content there stays
+    bit-identical — the chunked-prefill analogue of
+    :func:`masked_row_write`'s frozen-slot no-op."""
+    b, c = val.shape[0], val.shape[1]
+    idx = start[:, None] + jnp.arange(c)[None, :]          # (B, C)
+    ok = jnp.arange(c)[None, :] < valid_len[:, None]
+    safe = jnp.where(ok, idx, buf.shape[1])                # OOB -> dropped
+    rows = jnp.arange(b)[:, None]
+    return buf.at[rows, safe].set(val, mode="drop")
+
+
 def masked_row_write(buf: jnp.ndarray, slot: jnp.ndarray, val: jnp.ndarray,
                      active=None) -> jnp.ndarray:
     """Write ``val`` (B, ...) into ``buf`` (B, L, ...) at per-row position
@@ -362,6 +378,7 @@ def attention_block(
     cur_index=None,
     attn_impl: str = "xla",
     active=None,
+    valid_len=None,
 ) -> Tuple[jnp.ndarray, object]:
     """Full attention block: proj -> rope -> (cache update) -> sdpa -> out proj.
 
@@ -373,6 +390,17 @@ def attention_block(
     write (their buffer row is bit-identical afterwards) — the caller
     freezes their ``len`` to match, so a frozen slot's cache is untouched
     by the dispatch it shared with live slots.
+    Chunked prefill: ``cache`` given AND x is (B, C>1, d) — the C fresh
+    tokens start at absolute position ``cur_index`` (B,) and only the first
+    ``valid_len`` (B,) of them are real (the rest is bucket padding).  The
+    valid span's K/V are span-written into the buffer and the chunk's
+    queries attend over the whole buffer under a ``kv_len`` mask — masked
+    positions contribute exactly +0.0 after softmax (the same invariant
+    batched bucketed prefill already relies on), so chunked prefill is
+    bit-identical to one-shot prefill.  Ring/quantized caches are rejected:
+    a ring write is position-destructive and a quantized read would
+    dequantize the prefix while one-shot prefill attends the unquantized
+    fresh K/V, breaking bit-identity.
     """
     b, s, _ = x.shape
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -409,6 +437,20 @@ def attention_block(
         ringed = cache.ring
         # cur_index may be scalar or per-batch (B,) under continuous batching
         cur = jnp.broadcast_to(jnp.asarray(cur_index), (b,))
+        if s > 1:
+            # chunked prefill over a partially-filled cache (see docstring)
+            if ringed or cache.quantized:
+                raise ValueError(
+                    "chunked prefill requires a dense unquantized KV cache "
+                    "(ring/SWA and int8 caches fall back to one-shot prefill)")
+            valid = jnp.broadcast_to(
+                jnp.asarray(s if valid_len is None else valid_len), (b,))
+            kbuf = masked_span_write(kbuf, cur, k, valid)
+            vbuf = masked_span_write(vbuf, cur, v, valid)
+            out = sdpa(q, kbuf, vbuf, causal=True, q_offset=cur,
+                       kv_len=cur + valid, window=window)
+            out = out.reshape(b, s, h * hd)
+            return out @ p["wo"], KVCache(kbuf, vbuf, False)
         slot = cur % L if ringed else cur
         if cache.quantized:
             kq, ks = quantize_kv(k)

@@ -186,11 +186,11 @@ def unembed(params: Params, cfg, h: jnp.ndarray) -> jnp.ndarray:
 
 
 def _dense_body(cfg, attn_impl, moe_impl, lp: Params, x, cos_sin,
-                cache=None, cur_index=None, active=None):
+                cache=None, cur_index=None, active=None, valid_len=None):
     h = L.apply_norm(cfg, lp["attn_norm"], x)
     attn_out, kv = L.attention_block(
         lp["attn"], cfg, h, cos_sin, cache=cache, cur_index=cur_index,
-        attn_impl=attn_impl, active=active,
+        attn_impl=attn_impl, active=active, valid_len=valid_len,
     )
     x = x + attn_out
     h = L.apply_norm(cfg, lp["mlp_norm"], x)
@@ -541,6 +541,63 @@ def prefill(params: Params, cfg, batch: Dict, cache: Cache,
         hsel = h[:, -1:, :]
     logits = unembed(params, cfg, hsel)
     return logits, cache
+
+
+#: families :func:`prefill_chunk` supports — attention-only stacks whose KV
+#: writes are position-addressable.  Recurrent state (ssm/hybrid) absorbs
+#: every position it sees, and audio carries encoder cross-KV seeded by the
+#: one-shot path; both keep exact one-shot prefill.
+CHUNKABLE_FAMILIES = ("dense", "moe", "vlm")
+
+
+def prefill_chunk(params: Params, cfg, batch: Dict, cache: Cache,
+                  *, attn_impl: str = "xla", moe_impl: str = "dense",
+                  start, valid_len):
+    """Process ONE prompt chunk against a partially-filled cache.
+
+    ``batch["tokens"]`` is (B, C) — C chunk tokens (right-padded to a shape
+    bucket), of which the first ``valid_len`` (B,) are real, starting at
+    absolute position ``start`` (B,) = tokens already prefilled.  The chunk's
+    K/V are span-written into the cache at ``[start, start + valid_len)``
+    and its queries attend over the whole buffer under a ``kv_len`` mask, so
+    running a prompt as chunks is **bit-identical** to :func:`prefill` (see
+    ``layers.attention_block``).  Returns logits at the chunk's last valid
+    position (B, 1, V) — the caller samples the first output token from the
+    final chunk's logits, exactly as it does from one-shot prefill's.
+
+    Only :data:`CHUNKABLE_FAMILIES` with dense unquantized KV caches are
+    supported; callers fall back to one-shot prefill otherwise.
+    """
+    if cfg.family not in CHUNKABLE_FAMILIES:
+        raise ValueError(
+            f"prefill_chunk supports families {CHUNKABLE_FAMILIES}, "
+            f"got {cfg.family!r} — use one-shot prefill")
+    tokens = batch["tokens"]
+    b, c = tokens.shape
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (b,))
+    valid = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+    pos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    h, pos = embed_inputs(params, cfg, {**batch, "positions": pos})
+    cos_sin = (L.positional_cos_sin(cfg, pos)
+               if cfg.rope_type in ("rope", "mrope") else None)
+    kvc = cache["kv"]
+
+    def body(carry, inp):
+        x, aux = carry
+        lp, kb, vb = inp
+        x, nkv, a = _dense_body(cfg, attn_impl, moe_impl, lp, x, cos_sin,
+                                cache=L.KVCache(kb, vb, kvc.ring),
+                                cur_index=start, valid_len=valid)
+        return (x, aux + a), (nkv.k, nkv.v)
+
+    (h, _), (knew, vnew) = layer_scan(
+        body, (h, jnp.float32(0)), (params["layers"], kvc.k, kvc.v)
+    )
+    new_cache = dict(cache)
+    new_cache["kv"] = KVCache(knew, vnew, kvc.ring)
+    new_cache["len"] = start + valid
+    hsel = h[jnp.arange(b), valid - 1][:, None, :]
+    return unembed(params, cfg, hsel), new_cache
 
 
 # =========================================================================== #

@@ -104,6 +104,14 @@ class ExperimentConfig:
     #: feed ground-truth remaining to predictor.observe every window (the
     #: simulator replays realised lengths, so truth is available mid-flight)
     observe_in_flight: bool = True
+    #: chunked prefill: split prompt ingestion into chunks of this many
+    #: tokens, at most one chunk per scheduling window, interleaved with
+    #: decode (None = one-shot prefill)
+    prefill_chunk: Optional[int] = None
+    #: host<->device KV transfer bandwidth/latency the swap preemption
+    #: tier is priced with (PreemptionConfig.policy = swap | auto)
+    swap_bandwidth_bytes_s: float = 16e9
+    swap_latency_s: float = 0.0005
 
 
 def make_predictor(kind: str, seed: int = 0, bge=None, *,
@@ -164,7 +172,9 @@ def run_experiment(cfg: ExperimentConfig, *, bge=None,
                      if cfg.hw_speedup != 1.0 else PROFILES[name])
             for n, name in cfg.node_profiles.items()
         }
-    executor = SimExecutor(profile, node_profiles=node_profiles)
+    executor = SimExecutor(profile, node_profiles=node_profiles,
+                           swap_bandwidth_bytes_s=cfg.swap_bandwidth_bytes_s,
+                           swap_latency_s=cfg.swap_latency_s)
 
     predictor = make_predictor(cfg.predictor, seed=cfg.seed + 1, bge=bge,
                                calibration=cfg.calibrate,
@@ -175,6 +185,7 @@ def run_experiment(cfg: ExperimentConfig, *, bge=None,
             policy=cfg.policy, window=cfg.window, batch_size=cfg.batch_size,
             aging_rate=cfg.aging_rate, repredict_every=cfg.repredict_every,
             risk_quantile=cfg.risk_quantile,
+            prefill_chunk=cfg.prefill_chunk,
         ),
         preemption=cfg.preemption,
         placement=cfg.placement,
@@ -226,7 +237,7 @@ def run_experiment(cfg: ExperimentConfig, *, bge=None,
             m["tenants"] = summarize_by_tenant(done, slo_targets)
             m["fairness_jct"] = fairness_ratio(
                 {t: s["jct_mean"] for t, s in m["tenants"].items()})
-    m["mem_preemptions"] = executor.mem_preemptions
+    m.update(executor.counters())
     m["migrations"] = server.frontend.migrations
     return m
 

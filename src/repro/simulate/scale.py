@@ -61,8 +61,10 @@ import numpy as np
 
 from repro.core.metrics import StreamingSummary, fairness_ratio
 from repro.core.scheduler import (
+    PREEMPT_POLICIES,
     PRIORITY_CLASS_WEIGHT,
     PreemptionConfig,
+    decide_preempt,
     select_fills,
     select_preemptions,
 )
@@ -125,9 +127,26 @@ class ScaleSimConfig:
     coalesce: bool = True
     #: finished records buffered between streaming-metrics flushes
     flush_every: int = 8192
+    #: chunked prefill (SchedulerConfig.prefill_chunk mirror): at most one
+    #: batch-1 prefill chunk of this many tokens per window, decode runs
+    #: only the prefill-complete sub-batch.  None = one-shot prefill.
+    #: Coalescing auto-disables when set (a mid-prefill job breaks the
+    #: all-jobs-decode invariant coalescing relies on).
+    prefill_chunk: Optional[int] = None
+    #: host<->device KV copy model for ``preemption.policy`` swap/auto
+    #: (SimExecutor mirror)
+    swap_bandwidth_bytes_s: float = 16e9
+    swap_latency_s: float = 0.0005
 
     # ------------------------------------------------------------------ #
     def validate(self) -> None:
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1 or None, got {self.prefill_chunk}")
+        if self.preemption.policy not in PREEMPT_POLICIES:
+            raise ValueError(
+                f"unknown preempt policy {self.preemption.policy!r}; "
+                f"choose one of {PREEMPT_POLICIES}")
         if (not isinstance(self.model, ModelProfile)
                 and self.model not in PROFILES):
             raise ValueError(f"unknown model {self.model!r} "
@@ -178,6 +197,11 @@ class ScaleResult:
     n_windows: int
     n_coalesced: int
     wall_s: float
+    n_swapouts: int = 0
+    n_swapins: int = 0
+    #: context tokens re-prefilled by recompute-on-resume (SimExecutor's
+    #: ``recompute_prefill_tokens`` mirror)
+    recompute_prefill_tokens: int = 0
 
     def jct(self) -> np.ndarray:
         """Finished jobs' completion times (NaN elsewhere)."""
@@ -210,6 +234,9 @@ class ScaleResult:
         out["n_expired"] = int((self.state == EXPIRED).sum())
         out["n_windows"] = self.n_windows
         out["n_coalesced_windows"] = self.n_coalesced
+        out["n_swapouts"] = self.n_swapouts
+        out["n_swapins"] = self.n_swapins
+        out["recompute_prefill_tokens"] = self.recompute_prefill_tokens
         out["wall_s"] = self.wall_s
         out["requests_per_s"] = (self.workload.n / self.wall_s
                                  if self.wall_s > 0 else 0.0)
@@ -236,7 +263,8 @@ class ScaleSimulator:
         # non-repredicting policy) AND the skipped predicted-work refreshes
         # are integer-valued (oracle) or absent (no work tracking)
         self._coalesce = cfg.coalesce and (
-            not noisy or (cfg.policy != "isrtf" and not self._track_work))
+            not noisy or (cfg.policy != "isrtf" and not self._track_work)
+        ) and cfg.prefill_chunk is None
 
     # ------------------------------------------------------------------ #
     def run(self, w: ScaleWorkload) -> ScaleResult:
@@ -254,6 +282,11 @@ class ScaleSimulator:
         aging = cfg.aging_rate
         stride = max(cfg.repredict_every, 1)
         pcfg = cfg.preemption
+        chunk = cfg.prefill_chunk
+        chunked = chunk is not None
+        swap_policy = pcfg.policy != "recompute"
+        swap_lat = cfg.swap_latency_s
+        swap_bw = cfg.swap_bandwidth_bytes_s
         track_work = self._track_work
         refresh_work = track_work and self._predicts_length
         placement = cfg.placement
@@ -280,6 +313,11 @@ class ScaleSimulator:
         npre = np.zeros(n, dtype=np.int64)
         niter = np.zeros(n, dtype=np.int64)
         resident = np.zeros(n, dtype=bool)
+        pref = np.zeros(n, dtype=np.int64)   # Job.prefilled_tokens mirror
+        swapped = np.zeros(n, dtype=bool)    # KV stashed in host memory
+        n_swapouts = 0
+        n_swapins = 0
+        recompute_toks = 0
         workv = np.zeros(n)          # GlobalState._job_work mirror
         # prediction caches (repredict_every stride; noisy ISRTF only —
         # oracle scores are reproducible from (length, gen) at any time)
@@ -368,6 +406,8 @@ class ScaleSimulator:
             state[j] = EXPIRED
             finish[j] = t
             resident[j] = False
+            swapped[j] = False
+            pref[j] = 0
             active[node] -= 1
             work_node[node] -= workv[j]
             workv[j] = 0.0
@@ -524,7 +564,15 @@ class ScaleSimulator:
                         gen_at[sub] = gs
                         scored[sub] = True
 
-            eff = raw + band[idx]
+            if chunked:
+                # prefill debt joins the raw score exactly as score_pool's
+                # ``p + prefill_debt(cfg, j)`` (then banding), so partially
+                # prefilled / recompute-evicted jobs rank by TOTAL work
+                debt = np.maximum(plen[idx] + g - pref[idx], 0
+                                  ).astype(np.float64)
+                eff = (raw + debt) + band[idx]
+            else:
+                eff = raw + band[idx]
             if aging > 0:
                 le = last_enq[idx]
                 m = ~np.isnan(le)
@@ -549,6 +597,7 @@ class ScaleSimulator:
             # ---------------- preemption ------------------------------- #
             weff = eff[nr:]
             weff_l = weff.tolist()
+            extra_swap = 0.0   # host<->device KV copy seconds this window
             if pcfg.enabled and nr and wq:
                 run_pairs = list(zip(eff[:nr].tolist(), rq))
                 nw = len(wq)
@@ -565,11 +614,43 @@ class ScaleSimulator:
                     npre[vid] += 1
                     last_enq[vid] = now
                     wq.append(vid)
-                    resident[vid] = False
-                    # re-banded, zero-aging eff of the raw score this
-                    # window used (frontend's cached_raw_priority patch)
                     vraw = raw[pool.index(vid)]
-                    weff_l.append(float(vraw) + float(band[vid]))
+                    # swap-vs-recompute treatment of the victim's KV —
+                    # same decide_preempt call / cost arithmetic as
+                    # ELISFrontend + SimExecutor.preempt_costs
+                    mode = "recompute"
+                    if swap_policy:
+                        n_kv = int(pref[vid])
+                        costs = None
+                        if n_kv > 0:
+                            profv = profiles[node]
+                            costs = (
+                                2.0 * (swap_lat
+                                       + n_kv * profv.kv_bytes_per_token
+                                       / swap_bw),
+                                profv.prefill_ms(1, n_kv) / 1000.0)
+                        mode = decide_preempt(pcfg, costs, float(vraw))
+                    if mode == "swap":
+                        swapped[vid] = True
+                        resident[vid] = False
+                        extra_swap += (swap_lat
+                                       + int(pref[vid])
+                                       * profiles[node].kv_bytes_per_token
+                                       / swap_bw)
+                        n_swapouts += 1
+                    else:
+                        resident[vid] = False
+                        pref[vid] = 0
+                    # re-banded, zero-aging eff of the raw score this
+                    # window used (frontend's cached_raw_priority patch,
+                    # plus the post-evict/offload prefill debt)
+                    if chunked:
+                        debt_v = float(max(int(plen[vid]) + int(gen[vid])
+                                           - int(pref[vid]), 0))
+                        weff_l.append((float(vraw) + debt_v)
+                                      + float(band[vid]))
+                    else:
+                        weff_l.append(float(vraw) + float(band[vid]))
                     k = wq.index(rid)
                     del wq[k]
                     del weff_l[k]
@@ -605,17 +686,63 @@ class ScaleSimulator:
             prefill_ms = 0.0
             speedup = prof.prefill_speedup
             for jid in batch:
-                if not resident[jid]:
-                    nt = int(plen[jid] + gen[jid])
-                    prefill_ms += nt * dec / speedup
+                if swapped[jid]:
+                    # lazy swap-in on dispatch: copy time, KV + prefill
+                    # cursor survive (SimExecutor.execute mirror)
+                    swapped[jid] = False
                     resident[jid] = True
+                    extra_swap += (swap_lat
+                                   + int(pref[jid]) * prof.kv_bytes_per_token
+                                   / swap_bw)
+                    n_swapins += 1
+                elif not resident[jid]:
+                    nt = int(plen[jid] + gen[jid])
+                    if gen[jid] > 0:
+                        recompute_toks += nt
+                    resident[jid] = True
+                    if chunked:
+                        pref[jid] = 0  # KV materialises chunk by chunk
+                    else:
+                        prefill_ms += nt * dec / speedup
+                        pref[jid] = nt
             idxb = np.asarray(batch, dtype=np.intp)
             gb = gen[idxb]
+            elig = None
+            if chunked:
+                # decode eligibility BEFORE the chunk advances: a job
+                # completing its final chunk decodes from the next window
+                goal = plen[idxb] + np.where(gb > 0, gb - 1, 0)
+                elig = pref[idxb] >= goal
+                if not bool(elig.all()):
+                    # at most ONE batch-1 chunk per window, first
+                    # incomplete job in batch order
+                    k0 = int(np.nonzero(~elig)[0][0])
+                    j0 = batch[k0]
+                    n_c = min(chunk, int(goal[k0]) - int(pref[j0]))
+                    dec1 = decode_cache.get((node, 1))
+                    if dec1 is None:
+                        dec1 = prof.decode_ms(1)
+                        decode_cache[(node, 1)] = dec1
+                    prefill_ms += n_c * dec1 / speedup
+                    pref[j0] += n_c
             rem = length[idxb] - gb
             n_new = np.minimum(window, rem)
-            max_new = int(n_new.max())
-            decode_ms = max_new * dec
+            if chunked:
+                n_new = np.where(elig, n_new, 0)
+                b_dec = int(elig.sum())
+                if b_dec:
+                    dec_e = decode_cache.get((node, b_dec))
+                    if dec_e is None:
+                        dec_e = prof.decode_ms(b_dec)
+                        decode_cache[(node, b_dec)] = dec_e
+                    decode_ms = int(n_new.max()) * dec_e
+                else:
+                    decode_ms = 0.0
+            else:
+                decode_ms = int(n_new.max()) * dec
             duration = overhead + (prefill_ms + decode_ms) / 1000.0
+            if extra_swap:
+                duration += extra_swap
             end = now + duration
             busy_g[node] = end
 
@@ -638,23 +765,35 @@ class ScaleSimulator:
                     gb = gb[keep]
                     rem = rem[keep]
                     n_new = n_new[keep]
+                    if elig is not None:
+                        elig = elig[keep]
 
             if batch:
+                # Job.prefilled_tokens mirror: decoded jobs' KV now covers
+                # prompt + everything generated (read before gen advances)
+                if chunked:
+                    pref[idxb] = np.where(elig, plen[idxb] + gb + n_new,
+                                          pref[idxb])
+                else:
+                    pref[idxb] = plen[idxb] + gb + n_new
                 gen[idxb] = gb + n_new
                 niter[idxb] += 1
                 ftb = first_tok[idxb]
-                first_tok[idxb] = np.where(np.isnan(ftb), end, ftb)
+                first_tok[idxb] = np.where(np.isnan(ftb) & (n_new > 0),
+                                           end, ftb)
                 fin = n_new >= rem
                 fins: List[int] = []
                 if track_work:
                     # sequential, interleaving decay-then-finish per job in
                     # batch order — the exact loop's accumulation order
+                    # (mid-prefill jobs emit no tokens: no decay, exactly
+                    # the frontend's ``if toks`` guard)
                     nn_l = n_new.tolist()
                     fin_l = fin.tolist()
                     acc = work_node[node]
                     for k, jid in enumerate(batch):
                         wv = workv[jid]
-                        if wv > 0:
+                        if nn_l[k] and wv > 0:
                             nv = max(wv - nn_l[k], 0.0)
                             acc += nv - wv
                             workv[jid] = nv
@@ -671,6 +810,7 @@ class ScaleSimulator:
                     rq.remove(jid)
                     active[node] -= 1
                     resident[jid] = False
+                    pref[jid] = 0
                     finished_order.append(jid)
             n_windows += 1
 
@@ -724,7 +864,9 @@ class ScaleSimulator:
             n_preemptions=npre, n_iterations=niter,
             finished_order=np.asarray(finished_order, dtype=np.int64),
             tenant_summaries=t_sum, n_windows=n_windows,
-            n_coalesced=n_coalesced, wall_s=time.perf_counter() - t0)
+            n_coalesced=n_coalesced, wall_s=time.perf_counter() - t0,
+            n_swapouts=n_swapouts, n_swapins=n_swapins,
+            recompute_prefill_tokens=recompute_toks)
 
 
 # --------------------------------------------------------------------------- #
@@ -745,6 +887,10 @@ class ExactResult:
     n_iterations: np.ndarray
     finished_order: np.ndarray
     jobs: list
+    # executor-side swap/recompute totals, compared against ScaleResult's
+    n_swapouts: int = 0
+    n_swapins: int = 0
+    recompute_prefill_tokens: int = 0
 
 
 def run_exact_reference(cfg: ScaleSimConfig, w: ScaleWorkload) -> ExactResult:
@@ -765,14 +911,17 @@ def run_exact_reference(cfg: ScaleSimConfig, w: ScaleWorkload) -> ExactResult:
                          for n, name in cfg.node_profiles.items()}
     kw = ({} if cfg.sched_overhead_s is None
           else {"sched_overhead_s": cfg.sched_overhead_s})
-    executor = SimExecutor(profile=base, node_profiles=node_profiles, **kw)
+    executor = SimExecutor(profile=base, node_profiles=node_profiles,
+                           swap_bandwidth_bytes_s=cfg.swap_bandwidth_bytes_s,
+                           swap_latency_s=cfg.swap_latency_s, **kw)
     predictor = make_predictor(cfg.predictor, seed=cfg.seed + 1,
                                bias=cfg.predictor_bias)
     fcfg = FrontendConfig(
         n_nodes=cfg.n_nodes,
         scheduler=SchedulerConfig(
             policy=cfg.policy, window=cfg.window, batch_size=cfg.batch_size,
-            aging_rate=cfg.aging_rate, repredict_every=cfg.repredict_every),
+            aging_rate=cfg.aging_rate, repredict_every=cfg.repredict_every,
+            prefill_chunk=cfg.prefill_chunk),
         preemption=cfg.preemption,
         placement=cfg.placement,
         node_token_cost=executor.node_token_cost(cfg.n_nodes),
@@ -819,4 +968,8 @@ def run_exact_reference(cfg: ScaleSimConfig, w: ScaleWorkload) -> ExactResult:
     assert len(profs) == cfg.n_nodes
     return ExactResult(state=state, finish=finish, first_token=first_token,
                        queuing_delay=qd, n_preemptions=pre, n_iterations=it,
-                       finished_order=order, jobs=jobs)
+                       finished_order=order, jobs=jobs,
+                       n_swapouts=executor.n_swapouts,
+                       n_swapins=executor.n_swapins,
+                       recompute_prefill_tokens=
+                       executor.recompute_prefill_tokens)

@@ -1,0 +1,254 @@
+"""Live-engine chunked prefill & KV offload: greedy-token identity
+against one-shot prefill (dense + moe), mid-prefill decode exclusion,
+the loud ring/SWA fallback, bit-exact swap round-trips, and live<->sim
+preempt->resume cost parity (``resume_context_tokens`` equals the
+simulator's ``recompute_prefill_tokens`` charge)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Job
+from repro.engine import EngineConfig, InferenceEngine
+from repro.engine.engine import _gather_slots
+from repro.models import init_params
+from repro.simulate.executor import SimExecutor
+from repro.simulate.profiles import PROFILES
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _job(i, n):
+    return Job(job_id=i, prompt=f"p{i}",
+               prompt_tokens=[11 + (5 * i + k) % 60 for k in range(n)],
+               arrival_time=0.0)
+
+
+def _ecfg(**kw):
+    base = dict(max_slots=2, max_len=128, max_output=64, eos_id=-1)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _drive(cfg, params, plen, n_out, prefill_chunk, window=6, ecfg=None):
+    """Run one job to ``n_out`` generated tokens, returning the stream."""
+    eng = InferenceEngine(cfg, params, ecfg or _ecfg())
+    j = _job(0, plen)
+    out = []
+    for _ in range(64):
+        toks, fins = eng.run_window([j], window, prefill_chunk=prefill_chunk)
+        j.generated.extend(toks[0])
+        out.extend(toks[0])
+        if fins[0] or len(out) >= n_out:
+            break
+    return out[:n_out], eng
+
+
+# --------------------------------------------------------------------------- #
+# Chunked prefill == one-shot prefill (greedy tokens)
+# --------------------------------------------------------------------------- #
+
+
+def test_chunked_matches_oneshot_dense(setup):
+    cfg, params = setup
+    ref, _ = _drive(cfg, params, plen=41, n_out=18, prefill_chunk=None)
+    got, eng = _drive(cfg, params, plen=41, n_out=18, prefill_chunk=8)
+    assert got == ref
+    assert eng.num_chunk_dispatches >= 5            # ceil(41/8) passes ran
+    # chunk dispatches reuse the seq-bucket ladder: no trace explosion
+    assert eng.num_chunk_traces <= 2
+
+
+def test_chunked_matches_oneshot_moe():
+    cfg = get_config("qwen2-moe-a2.7b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ref, _ = _drive(cfg, params, plen=21, n_out=8, prefill_chunk=None,
+                    window=4)
+    got, eng = _drive(cfg, params, plen=21, n_out=8, prefill_chunk=6,
+                      window=4)
+    assert got == ref
+    assert eng.num_chunk_dispatches >= 3
+
+
+def test_midprefill_job_emits_nothing(setup):
+    """A chunk-admitted job joins decode only after its final chunk — and
+    the already-running batchmate keeps its exact stream meanwhile."""
+    cfg, params = setup
+    solo = InferenceEngine(cfg, params, _ecfg())
+    s = _job(1, 5)
+    solo_toks = []
+    for _ in range(3):
+        t, _ = solo.run_window([s], 4)
+        s.generated.extend(t[0])
+        solo_toks.extend(t[0])
+
+    eng = InferenceEngine(cfg, params, _ecfg())
+    j1, j2 = _job(1, 5), _job(2, 30)
+    got = []
+    # j1's single chunk lands in window 1 (decode starts the window after),
+    # so 4 chunked windows cover solo's 3 decode windows
+    for _ in range(4):
+        toks, _ = eng.run_window([j1, j2], 4, prefill_chunk=8)
+        j1.generated.extend(toks[0])
+        j2.generated.extend(toks[1])
+        got.extend(toks[0])
+        if eng.prefill_incomplete(j2.job_id):
+            assert toks[1] == []                    # mid-prefill: no tokens
+    assert got == solo_toks
+    assert j2.prefilled_tokens <= 30
+
+
+def test_chunk_fallback_warns_once_on_ring_cache():
+    """mixtral's sliding-window (ring) cache can't chunk: loud one-shot
+    fallback, warned exactly once, tokens unchanged."""
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ref, _ = _drive(cfg, params, plen=9, n_out=6, prefill_chunk=None,
+                    window=3)
+    eng = InferenceEngine(cfg, params, _ecfg())
+    assert not eng.chunk_supported()
+    j = _job(0, 9)
+    with pytest.warns(UserWarning, match="prefill_chunk is not supported"):
+        toks, _ = eng.run_window([j], 3, prefill_chunk=4)
+    j.generated.extend(toks[0])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")              # second call: silent
+        t2, _ = eng.run_window([j], 3, prefill_chunk=4)
+    assert toks[0] + t2[0] == ref
+    assert eng.num_chunk_dispatches == 0
+
+
+# --------------------------------------------------------------------------- #
+# KV offload round-trip
+# --------------------------------------------------------------------------- #
+
+
+def test_swap_roundtrip_bit_exact_and_stream_exact(setup):
+    cfg, params = setup
+    eng = InferenceEngine(cfg, params, _ecfg())
+    j0, j1 = _job(3, 9), _job(4, 7)
+    toks, _ = eng.run_window([j0, j1], 5)
+    j0.generated.extend(toks[0])
+    j1.generated.extend(toks[1])
+    slot = eng.slot_of[j0.job_id]
+    before = jax.device_get(
+        _gather_slots(eng.cache, jnp.asarray([slot], jnp.int32)))
+    assert eng.offload_job(j0.job_id)
+    assert eng.has_stash(j0.job_id) and not eng.has_job(j0.job_id)
+    toks, _ = eng.run_window([j1], 5)               # j1 runs while j0 is out
+    j1.generated.extend(toks[0])
+    new_slot = eng.restore_job(j0)
+    after = jax.device_get(
+        _gather_slots(eng.cache, jnp.asarray([new_slot], jnp.int32)))
+    for a, b in zip(jax.tree_util.tree_leaves(after),
+                    jax.tree_util.tree_leaves(before)):
+        assert np.array_equal(a, b), "swap round-trip not bit-exact"
+    # the restored job continues the uninterrupted greedy stream
+    ref = InferenceEngine(cfg, params, _ecfg())
+    rj = _job(3, 9)
+    rt, _ = ref.run_window([rj], 5)
+    rj.generated.extend(rt[0])
+    rt, _ = ref.run_window([rj], 5)
+    toks, _ = eng.run_window([j0, j1], 5)
+    assert toks[0] == rt[0]
+    assert eng.resume_context_tokens == 0           # swap is not a recompute
+
+
+def test_swap_midprefill_roundtrip(setup):
+    """Offloading a job mid-chunked-prefill preserves the chunk cursor:
+    the restored job finishes prefill and matches the one-shot stream."""
+    cfg, params = setup
+    ref, _ = _drive(cfg, params, plen=20, n_out=6, prefill_chunk=None,
+                    window=3)
+    eng = InferenceEngine(cfg, params, _ecfg())
+    j = _job(0, 20)
+    eng.run_window([j], 3, prefill_chunk=6)         # one 6-token chunk in
+    assert eng.prefill_incomplete(j.job_id)
+    cur = eng._prefill_cursor[j.job_id]
+    assert eng.offload_job(j.job_id)
+    eng.restore_job(j)
+    assert eng._prefill_cursor[j.job_id] == cur
+    out = []
+    for _ in range(16):
+        toks, _ = eng.run_window([j], 3, prefill_chunk=6)
+        j.generated.extend(toks[0])
+        out.extend(toks[0])
+        if len(out) >= 6:
+            break
+    assert out[:6] == ref
+
+
+# --------------------------------------------------------------------------- #
+# Live <-> sim preempt->resume cost parity
+# --------------------------------------------------------------------------- #
+
+
+def _sim_resume_charge(plen, gen, *, policy, prefill_chunk=None):
+    """SimExecutor's recompute charge for resuming a (plen, gen) job."""
+    ex = SimExecutor(PROFILES["lam13"])
+    j = Job(job_id=0, prompt="x", prompt_tokens=[5] * plen, arrival_time=0.0,
+            true_output_len=gen + 50, output_tokens=[5] * (gen + 50))
+    j.generated = [5] * gen
+    j.prefilled_tokens = plen + gen
+    ex._resident.setdefault(0, set()).add(0)
+    ex._resident_tokens.setdefault(0, {})[0] = j.prefilled_tokens
+    if policy == "swap":
+        assert ex.offload(0, j)
+    else:
+        ex.evict(0, j)
+    ex.execute(0, [j], 4, 0.0, prefill_chunk=prefill_chunk)
+    return ex.recompute_prefill_tokens
+
+
+@pytest.mark.parametrize("chunk", [None, 4])
+def test_resume_cost_parity_recompute(setup, chunk):
+    """The live engine's measured resume re-prefill token count equals the
+    simulator's recompute charge for the same (prompt, generated) state."""
+    cfg, params = setup
+    eng = InferenceEngine(cfg, params, _ecfg(max_slots=1))
+    j = _job(0, 9)
+    for _ in range(8):                              # prefill (+chunks) + gen
+        toks, _ = eng.run_window([j], 4, prefill_chunk=chunk)
+        j.generated.extend(toks[0])
+        if j.tokens_generated >= 4:
+            break
+    gen = j.tokens_generated
+    assert gen >= 4
+    eng.evict_job(j.job_id)                         # recompute preemption
+    j.prefilled_tokens = 0
+    assert eng.resume_context_tokens == 0
+    for _ in range(8):                              # resume to first emission
+        toks, _ = eng.run_window([j], 4, prefill_chunk=chunk)
+        if toks[0]:
+            break
+    live = eng.resume_context_tokens
+    assert live == 9 + gen                          # prompt + generated
+    assert live == _sim_resume_charge(9, gen, policy="recompute",
+                                      prefill_chunk=chunk)
+
+
+@pytest.mark.parametrize("chunk", [None, 4])
+def test_resume_cost_parity_swap(setup, chunk):
+    """Swap-resume charges zero recompute on both sides."""
+    cfg, params = setup
+    eng = InferenceEngine(cfg, params, _ecfg(max_slots=1))
+    j = _job(0, 9)
+    for _ in range(8):
+        toks, _ = eng.run_window([j], 4, prefill_chunk=chunk)
+        j.generated.extend(toks[0])
+        if j.tokens_generated >= 4:
+            break
+    gen = j.tokens_generated
+    assert eng.offload_job(j.job_id)
+    toks, _ = eng.run_window([j], 4, prefill_chunk=chunk)   # auto swap-in
+    assert eng.resume_context_tokens == 0
+    assert _sim_resume_charge(9, gen, policy="swap",
+                              prefill_chunk=chunk) == 0

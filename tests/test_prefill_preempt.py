@@ -1,0 +1,227 @@
+"""Chunked prefill + KV-offload preemption: scheduler debt, the
+swap-vs-recompute decision, sim-executor swap accounting, scale-path
+trace identity with both features enabled, and the launcher guards
+(``--mesh`` parsing, fairness zero-division, ``calibrated_profile``
+error surfaces)."""
+import numpy as np
+import pytest
+
+from repro.core import PREEMPT_POLICIES, Job, PreemptionConfig, SchedulerConfig
+from repro.core.metrics import fairness_ratio
+from repro.core.scheduler import decide_preempt, prefill_debt
+from repro.data.workload import ScaleWorkload
+from repro.engine import EngineExecutor
+from repro.launch.serve import parse_mesh
+from repro.simulate import ExperimentConfig, run_experiment
+from repro.simulate.executor import SimExecutor
+from repro.simulate.profiles import PROFILES
+from repro.simulate.scale import (
+    ScaleSimConfig,
+    ScaleSimulator,
+    run_exact_reference,
+)
+
+
+def _job(i, plen, out=0):
+    j = Job(job_id=i, prompt="x", prompt_tokens=list(range(plen)),
+            arrival_time=0.0, true_output_len=max(out, 1),
+            output_tokens=list(range(100, 100 + max(out, 1))))
+    return j
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler: prefill debt + the preempt decision
+# --------------------------------------------------------------------------- #
+
+
+class TestSchedulerCore:
+    def test_prefill_debt_off_without_chunking(self):
+        j = _job(0, 10)
+        j.prefilled_tokens = 0
+        assert prefill_debt(SchedulerConfig(), j) == 0.0
+
+    def test_prefill_debt_counts_unprefilled_context(self):
+        cfg = SchedulerConfig(prefill_chunk=4)
+        j = _job(0, 10)
+        assert prefill_debt(cfg, j) == 10.0          # nothing ingested yet
+        j.prefilled_tokens = 6
+        assert prefill_debt(cfg, j) == 4.0           # mid-chunk cursor
+        j.generated = [1, 2, 3]
+        assert prefill_debt(cfg, j) == 7.0           # generated adds context
+        j.prefilled_tokens = 99
+        assert prefill_debt(cfg, j) == 0.0           # clamped, never negative
+
+    def test_decide_preempt_validates_policy(self):
+        with pytest.raises(ValueError) as e:
+            decide_preempt(PreemptionConfig(policy="nope"), None, 0.0)
+        for p in PREEMPT_POLICIES:
+            assert p in str(e.value)
+
+    def test_decide_preempt_fixed_policies(self):
+        costs = (0.1, 9.0)
+        assert decide_preempt(
+            PreemptionConfig(policy="recompute"), costs, 5.0) == "recompute"
+        assert decide_preempt(
+            PreemptionConfig(policy="swap"), costs, 5.0) == "swap"
+
+    def test_decide_preempt_auto_breakeven(self):
+        cfg = PreemptionConfig(policy="auto", swap_hold_s_per_token=1e-3)
+        # swap 0.1s + hold 0.05s < recompute 0.5s -> swap
+        assert decide_preempt(cfg, (0.1, 0.5), 50.0) == "swap"
+        # a long predicted remaining makes holding host KV not worth it
+        assert decide_preempt(cfg, (0.1, 0.5), 1000.0) == "recompute"
+        # no cost estimate (no fit yet / nothing prefetched) -> recompute
+        assert decide_preempt(cfg, None, 50.0) == "recompute"
+
+    def test_scale_config_validates_chunk_and_policy(self):
+        with pytest.raises(ValueError):
+            ScaleSimConfig(prefill_chunk=0).validate()
+        with pytest.raises(ValueError):
+            ScaleSimConfig(
+                preemption=PreemptionConfig(policy="bogus")).validate()
+
+
+# --------------------------------------------------------------------------- #
+# Launcher / metrics guards
+# --------------------------------------------------------------------------- #
+
+
+class TestGuards:
+    def test_parse_mesh_accepts_dxm(self):
+        assert parse_mesh("2x4") == (2, 4)
+        assert parse_mesh("1X1") == (1, 1)
+
+    @pytest.mark.parametrize("bad", ["2x", "x4", "2x3x4", "ax4", "2x4.5",
+                                     "0x4", "2x-1", ""])
+    def test_parse_mesh_rejects_malformed(self, bad):
+        with pytest.raises(ValueError, match="DxM"):
+            parse_mesh(bad)
+
+    def test_fairness_ratio_guards_zero_min(self):
+        assert fairness_ratio({"a": 2.0, "b": 1.0}) == 2.0
+        # a zero-JCT tenant next to a non-zero one is maximal unfairness,
+        # not a ZeroDivisionError
+        assert fairness_ratio({"a": 2.0, "b": 0.0}) == float("inf")
+        assert fairness_ratio({"a": 0.0, "b": 0.0}) == 0.0
+        assert fairness_ratio({"a": 1.0}) == 0.0
+
+    def test_calibrated_profile_errors(self):
+        ex = EngineExecutor({0: object()})
+        with pytest.raises(ValueError, match="no executed windows"):
+            ex.calibrated_profile()
+        with pytest.raises(ValueError, match="unknown node"):
+            ex.calibrated_profile(nodes=[7])
+
+
+# --------------------------------------------------------------------------- #
+# SimExecutor: swap accounting
+# --------------------------------------------------------------------------- #
+
+
+class TestSimExecutorSwap:
+    def test_offload_restore_and_recompute_accounting(self):
+        ex = SimExecutor(PROFILES["lam13"])
+        j = _job(0, 20, out=30)
+        r = ex.execute(0, [j], 5, 0.0)
+        j.generated.extend(r.tokens[0])
+        assert j.prefilled_tokens == 25              # prompt + 5 generated
+        costs = ex.preempt_costs(0, j)
+        assert costs is not None and costs[0] > 0 and costs[1] > 0
+        # swap out: KV survives, restore pays bandwidth not recompute
+        assert ex.offload(0, j)
+        assert ex.n_swapouts == 1 and ex.swapout_tokens == 25
+        assert j.prefilled_tokens == 25
+        assert ex.restore(0, j)
+        r = ex.execute(0, [j], 5, 1.0)
+        j.generated.extend(r.tokens[0])
+        assert ex.recompute_prefill_tokens == 0
+        assert j.prefilled_tokens == 30              # prompt + 10 generated
+        # recompute eviction: cursor resets and the resume is re-charged
+        ex.evict(0, j)
+        assert j.prefilled_tokens == 0
+        assert ex.preempt_costs(0, j) is None        # nothing resident
+        ex.execute(0, [j], 5, 2.0)
+        assert ex.recompute_prefill_tokens == 30     # prompt + 10 generated
+
+    def test_swap_cost_scales_with_bandwidth(self):
+        slow = SimExecutor(PROFILES["lam13"], swap_bandwidth_bytes_s=1e9)
+        fast = SimExecutor(PROFILES["lam13"], swap_bandwidth_bytes_s=64e9)
+        for ex in (slow, fast):
+            j = _job(0, 50, out=10)
+            ex.execute(0, [j], 2, 0.0)
+            ex.last_costs = ex.preempt_costs(0, j)
+        assert slow.last_costs[0] > fast.last_costs[0]
+        assert slow.last_costs[1] == fast.last_costs[1]
+
+
+# --------------------------------------------------------------------------- #
+# ExperimentConfig threading
+# --------------------------------------------------------------------------- #
+
+
+def test_experiment_threads_chunk_and_swap():
+    cfg = ExperimentConfig(
+        model="lam13", policy="isrtf", n_requests=40, batch_size=3,
+        rps_multiple=2.0, predictor="oracle", seed=3, prefill_chunk=64,
+        preemption=PreemptionConfig(policy="auto", margin=5.0))
+    m = run_experiment(cfg)
+    assert m["n_finished"] == 40
+    for k in ("swapouts", "swapins", "recompute_prefill_tokens"):
+        assert k in m
+
+
+# --------------------------------------------------------------------------- #
+# Scale fast path: trace-identical with both features enabled
+# --------------------------------------------------------------------------- #
+
+
+def _mixed_workload(n, seed):
+    r = np.random.RandomState(seed)
+    arrival = np.sort(r.uniform(0, 20, n))
+    plen = np.where(r.rand(n) < 0.4, r.randint(200, 800, n),
+                    r.randint(8, 40, n))
+    return ScaleWorkload(
+        arrival=arrival, length=r.randint(5, 120, n).astype(np.int64),
+        prompt_len=plen.astype(np.int64),
+        tenant_id=np.zeros(n, dtype=np.int32),
+        priority_class=np.where(r.rand(n) < 0.2, 1, 0).astype(np.int16),
+        deadline=np.full(n, np.inf))
+
+
+def _assert_trace_identical(cfg, w):
+    ex = run_exact_reference(cfg, w)
+    sc = ScaleSimulator(cfg).run(w)
+    for f in ("state", "n_preemptions", "n_iterations", "finished_order"):
+        assert np.array_equal(getattr(ex, f), getattr(sc, f)), f
+    for f in ("finish", "first_token", "queuing_delay"):
+        a = np.nan_to_num(getattr(ex, f), nan=-1.0)
+        b = np.nan_to_num(getattr(sc, f), nan=-1.0)
+        assert np.array_equal(a, b), f
+    assert (ex.n_swapouts, ex.n_swapins, ex.recompute_prefill_tokens) == \
+           (sc.n_swapouts, sc.n_swapins, sc.recompute_prefill_tokens)
+    return sc
+
+
+class TestScaleTraceIdentity:
+    def test_chunked_prefill_trace_identical(self):
+        w = _mixed_workload(120, 0)
+        cfg = ScaleSimConfig(model="vic", n_nodes=2, batch_size=3, window=40,
+                             seed=0, prefill_chunk=48)
+        _assert_trace_identical(cfg, w)
+
+    def test_swap_policy_trace_identical(self):
+        w = _mixed_workload(120, 1)
+        cfg = ScaleSimConfig(
+            model="vic", n_nodes=2, batch_size=3, window=40, seed=0,
+            aging_rate=2.0,
+            preemption=PreemptionConfig(policy="swap", margin=5.0))
+        sc = _assert_trace_identical(cfg, w)
+        assert sc.n_swapouts > 0                     # the tier actually fired
+
+    def test_both_features_auto_trace_identical(self):
+        w = _mixed_workload(120, 2)
+        cfg = ScaleSimConfig(
+            model="vic", n_nodes=2, batch_size=3, window=40, seed=0,
+            prefill_chunk=32,
+            preemption=PreemptionConfig(policy="auto", margin=5.0))
+        _assert_trace_identical(cfg, w)
