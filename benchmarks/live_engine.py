@@ -8,7 +8,11 @@ Two studies on the real JAX engine (reduced model, wall-clock timed):
    (compacted) decode windows and ``serial`` = the pre-fast-path baseline
    (batch-1 prefills, full ``max_slots`` decode every window).  Asserts the
    fast path beats serial tokens/sec at ≥2 occupied slots and that the
-   pallas and xla decode paths emit identical greedy tokens.
+   pallas and xla decode paths emit identical greedy tokens.  With ≥2
+   devices the grid adds TP=2 cells: the ``shard_map``'d Pallas decode
+   kernel runs under the mesh (``pallas_fallback is False`` asserted) and
+   its greedy tokens must equal both the TP XLA path and the single-device
+   Pallas fast path (docs/kernels.md, DESIGN.md §11).
 2. **Policy comparison + live↔sim calibration** — ISRTF vs FCFS driven
    through the online :class:`ElisServer` API on an
    :class:`EngineExecutor`; the measured window log is fitted back onto the
@@ -66,7 +70,8 @@ def _job(i: int, n_prompt: int) -> Job:
 
 
 def _measure_variant(cfg, params, impl: str, fast: bool, occupancy: int,
-                     max_slots: int, window: int, n_windows: int) -> Dict:
+                     max_slots: int, window: int, n_windows: int,
+                     mesh=None) -> Dict:
     """Steady-state tokens/sec + per-window latency for one grid cell.
 
     The scenario is a *serve cycle* in the short-response churn regime —
@@ -77,11 +82,17 @@ def _measure_variant(cfg, params, impl: str, fast: bool, occupancy: int,
     admission (where batched prefill collapses N dispatches into one) AND
     decode (where masking compacts the dispatch to the occupied bucket).
     Warmup cycles pay all XLA compiles before timing starts.
+
+    With ``mesh`` the cell runs tensor-parallel; ``impl="pallas"`` then
+    exercises the mesh-aware shard_map'd decode kernel (DESIGN.md §11) —
+    the cell asserts it really ran (``pallas_fallback is False``).
     """
     eng = InferenceEngine(cfg, params, EngineConfig(
         max_slots=max_slots, max_len=128, max_output=window, eos_id=-1,
         attn_impl=impl, batched_prefill=fast, masked_decode=fast,
-        respect_job_max=False))
+        respect_job_max=False), mesh=mesh)
+    if mesh is not None and impl == "pallas":
+        assert eng.pallas_fallback is False, eng.pallas_fallback_reason
     next_id = [0]
 
     def fresh_batch():
@@ -115,6 +126,8 @@ def _measure_variant(cfg, params, impl: str, fast: bool, occupancy: int,
     total = sum(lat)
     return {
         "attn_impl": impl, "mode": "fast" if fast else "serial",
+        "tp": (1 if mesh is None
+               else int(np.asarray(mesh.devices).size)),
         "occupancy": occupancy, "max_slots": max_slots, "window": window,
         "tokens_per_s": round(tokens / total, 2),
         "cycle_ms_median": round(float(np.median(lat)) * 1000, 2),
@@ -157,6 +170,33 @@ def fast_path_grid(quick: bool) -> List[Dict]:
         assert f["tokens_per_s"] > s["tokens_per_s"], (
             f"fast path not faster at occupancy {occ}: "
             f"{f['tokens_per_s']} vs {s['tokens_per_s']} tok/s")
+
+    # mesh cells: the TP2 pallas-vs-xla decode comparison (DESIGN.md §11).
+    # On CPU the kernels run interpret=True, so this records the comparison
+    # and pins TOKEN IDENTITY across {TP pallas, TP xla, single-device};
+    # the perf win is a TPU claim, the identity contract is asserted here.
+    if len(jax.devices()) >= 2:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2,), ("model",), devices=jax.devices()[:2])
+        tp_occs = occupancies if not quick else (2,)
+        for occ in tp_occs:
+            for impl in impls:
+                rows.append(_measure_variant(
+                    cfg, params, impl, True, occ, max_slots, window,
+                    n_windows, mesh=mesh))
+                print({k: v for k, v in rows[-1].items() if k != "tokens"})
+        tp_by = {(r["attn_impl"], r["occupancy"]): r
+                 for r in rows if r.get("tp", 1) > 1}
+        for occ in tp_occs:
+            p, x = tp_by[("pallas", occ)], tp_by[("xla", occ)]
+            assert p["tokens"] == x["tokens"], \
+                f"TP pallas != TP xla tokens at occ={occ}"
+            assert p["tokens"] == by[("pallas", "fast", occ)]["tokens"], \
+                f"TP pallas != single-device pallas tokens at occ={occ}"
+    else:
+        print("[live_engine] <2 devices: skipping the TP pallas-vs-xla "
+              "cells (run with XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)")
     for r in rows:
         r.pop("tokens")
     return rows
@@ -334,7 +374,26 @@ def smoke() -> None:
             attn_impl=impl))
         outs[impl], _ = e.run_window([_job(7, 5), _job(8, 3)], 6)
     assert outs["xla"] == outs["pallas"], "pallas decode diverges from xla"
-    print("live_engine smoke: OK (prefill buckets, masked decode, pallas==xla)")
+
+    # pallas under a mesh: with >=2 devices the shard_map'd decode kernel
+    # must actually run (no fallback) and emit the same tokens (the CI
+    # pallas-under-mesh guard runs this smoke with 8 forced host devices)
+    if len(jax.devices()) >= 2:
+        from repro.launch.mesh import make_mesh
+        e = InferenceEngine(
+            cfg, params,
+            EngineConfig(max_slots=2, max_len=64, max_output=64, eos_id=-1,
+                         attn_impl="pallas"),
+            mesh=make_mesh((2,), ("model",), devices=jax.devices()[:2]))
+        assert e.pallas_fallback is False, e.pallas_fallback_reason
+        assert e.cfg.attn_impl == "pallas"
+        tp_out, _ = e.run_window([_job(7, 5), _job(8, 3)], 6)
+        assert tp_out == outs["xla"], "TP pallas decode diverges"
+        mesh_note = "TP pallas==xla"
+    else:
+        mesh_note = "TP cells skipped (<2 devices)"
+    print("live_engine smoke: OK (prefill buckets, masked decode, "
+          f"pallas==xla, {mesh_note})")
 
 
 if __name__ == "__main__":

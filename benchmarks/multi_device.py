@@ -21,6 +21,14 @@ pods have genuinely different measured token costs.  The benchmark then:
    fitted :class:`ModelProfile` objects plugged in directly (no registry
    round-trip) — the production-scale projection of *this* live cluster.
 
+A standalone **pallas-under-mesh cell** (smoke and full) additionally runs
+TP=2 decode with the ``shard_map``'d Pallas kernel vs the XLA path on the
+same mesh: it asserts the kernel actually ran (``pallas_fallback is
+False``) and that greedy tokens are bit-identical, and records tokens/s
+for both.  On forced CPU host devices the kernel executes
+``interpret=True``, so the cell is a correctness + plumbing record — the
+perf claim is a TPU claim (see ``docs/kernels.md``).
+
 Needs ≥3 host devices:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -35,6 +43,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import time
 
 if __name__ == "__main__":
     # direct CLI runs force the 8-device host before jax initialises; when
@@ -87,6 +96,49 @@ def _pods(cfg, params, ecfg):
                            mesh=make_mesh((1,), ("model",),
                                           devices=devs[2:3])),
     }
+
+
+def _pallas_cell(cfg, params, smoke: bool) -> dict:
+    """TP=2 decode, shard_map'd Pallas kernel vs XLA on the same mesh.
+
+    Asserts ``pallas_fallback is False`` (the kernel really ran — the CI
+    smoke's pallas-under-mesh guard) and greedy-token identity between the
+    two impls, then times decode-only windows for a tokens/s record.
+    """
+    mesh = make_mesh((2,), ("model",), devices=jax.devices()[:2])
+    n_timed = 2 if smoke else 6
+    tokens, tok_s = {}, {}
+    for impl in ("pallas", "xla"):
+        eng = InferenceEngine(
+            cfg, params,
+            EngineConfig(max_slots=SLOTS, max_len=256, max_output=512,
+                         eos_id=-1, attn_impl=impl),
+            mesh=mesh)
+        if impl == "pallas":
+            assert eng.pallas_fallback is False, eng.pallas_fallback_reason
+            assert eng.cfg.attn_impl == "pallas"
+        jobs = [Job(job_id=4000 + i, prompt="p",
+                    prompt_tokens=[7, 8, 9, 10, 11, 12],
+                    arrival_time=0.0) for i in range(SLOTS)]
+        toks, _ = eng.run_window(jobs, WINDOW)   # compile window (dropped)
+        t0 = time.perf_counter()
+        for _ in range(n_timed):                 # same slots: decode only
+            more, _ = eng.run_window(jobs, WINDOW)
+            for t, m in zip(toks, more):
+                t.extend(m)
+        dt = time.perf_counter() - t0
+        tokens[impl] = toks
+        tok_s[impl] = SLOTS * WINDOW * n_timed / dt
+    assert tokens["pallas"] == tokens["xla"], (
+        "TP pallas decode tokens diverge from TP xla")
+    cell = {"pallas_under_mesh": {
+        "tp": 2, "pallas_fallback": False, "tokens_identical": True,
+        "decode_tok_s": {k: round(v, 1) for k, v in tok_s.items()},
+    }}
+    print(f"[multi_device] TP2 pallas cell: tokens identical, "
+          f"pallas {tok_s['pallas']:.1f} tok/s vs xla "
+          f"{tok_s['xla']:.1f} tok/s (CPU interpret — correctness record)")
+    return cell
 
 
 def _workload(n: int, rate: float, seed: int) -> ScaleWorkload:
@@ -183,6 +235,9 @@ def run(smoke: bool = False, quick: bool = False):
         "mean_fit_overhead_ms": round(overhead_s * 1000, 3),
     }]
     print(f"[multi_device] fitted pods: {rows[0]['pods']}")
+
+    # 1b. pallas-under-mesh: shard_map'd decode kernel vs XLA on TP=2 ---- #
+    rows.append(_pallas_cell(cfg, params, smoke))
 
     # 2. live placement comparison (fitted costs drive least_eta) ------- #
     w = _workload(n, rate, seed=7)

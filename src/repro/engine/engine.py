@@ -32,7 +32,10 @@ Fast path (DESIGN.md §3.2–§3.4):
   * **Pallas decode attention** — ``attn_impl="pallas"`` routes
     ``T.decode_step`` through :mod:`repro.kernels.decode_attention` with
     the per-slot ``len`` vector as kv lengths; ``"xla"`` stays the
-    reference path (numerics-equivalence is CI-guarded).
+    reference path (numerics-equivalence is CI-guarded).  Under a TP mesh
+    the kernel runs ``shard_map``-ped over the "model" axis when the head
+    layout supports it (DESIGN.md §11, docs/kernels.md); unsupported
+    layouts fall back loudly, once, with the reason.
   * **compile/dispatch counters** — ``num_prefill_traces`` /
     ``num_prefill_dispatches`` / ``num_decode_traces`` /
     ``num_decode_dispatches`` mirror ``BGEPredictor``'s recompile-storm
@@ -142,31 +145,48 @@ class InferenceEngine:
     parameters and the slot cache are sharded via ``repro.launch.partition``
     (heads/ffn/vocab on the "model" axis, slots replicated) and every
     prefill/decode dispatch is jitted with ``NamedSharding``-annotated
-    inputs/outputs, so XLA inserts the tensor-parallel collectives.  The
-    Pallas flash-decode kernel does not partition under a mesh, so
-    ``attn_impl="pallas"`` falls back **loudly** to the XLA path (see
-    DESIGN.md §9)."""
+    inputs/outputs, so XLA inserts the tensor-parallel collectives.
+
+    ``attn_impl="pallas"`` under a mesh runs the **mesh-aware** flash-decode
+    kernel (``shard_map`` over "model", each shard attending its local KV
+    heads — DESIGN.md §11, docs/kernels.md) whenever
+    ``launch.partition.pallas_decode_support`` reports the layout supported;
+    otherwise the engine warns **once**, with the reason, and falls back to
+    the XLA decode path (``pallas_fallback`` / ``pallas_fallback_reason``).
+    Prefill-side kernels stay single-device, so under a mesh prefill always
+    uses the XLA path (identical numerics; ``T.prefill`` downgrades
+    internally)."""
 
     def __init__(self, model_cfg, params, cfg: Optional[EngineConfig] = None,
                  mesh=None):
         if cfg is None:
             cfg = EngineConfig()
         self.pallas_fallback = False
+        #: why pallas fell back (None when it didn't): a reason string from
+        #: ``launch.partition.pallas_decode_support``, category-prefixed
+        #: ("mesh:" / "family:" / "layout:")
+        self.pallas_fallback_reason: Optional[str] = None
         self.mesh = mesh
+        self._warned: set = set()
         if mesh is not None:
             if "model" not in mesh.axis_names:
                 raise ValueError(
                     f"engine mesh needs a 'model' axis, got {mesh.axis_names}")
             if cfg.attn_impl == "pallas":
-                # the loud-fallback rule: the flash-decode kernel indexes
-                # the full head axis per block, so it cannot run partitioned
-                # under the mesh — never silently serve different numerics
-                warnings.warn(
-                    "attn_impl='pallas' does not shard under a mesh; "
-                    "falling back to the XLA decode-attention path",
-                    UserWarning, stacklevel=2)
-                cfg = dataclasses.replace(cfg, attn_impl="xla")
-                self.pallas_fallback = True
+                from repro.launch.partition import pallas_decode_support
+                reason = pallas_decode_support(model_cfg, mesh)
+                if reason is not None:
+                    # the loud-fallback rule: never silently serve different
+                    # numerics — but only for layouts the shard_map'd kernel
+                    # genuinely cannot cover (DESIGN.md §11)
+                    self._warn_once(
+                        "pallas_fallback",
+                        "attn_impl='pallas' cannot shard for this "
+                        f"(config, mesh) — {reason}; falling back to the "
+                        "XLA decode-attention path")
+                    cfg = dataclasses.replace(cfg, attn_impl="xla")
+                    self.pallas_fallback = True
+                    self.pallas_fallback_reason = reason
         self.model_cfg = model_cfg
         self.cfg = cfg
         self.cache = T.init_cache(model_cfg, cfg.max_slots, cfg.max_len)
@@ -201,7 +221,8 @@ class InferenceEngine:
             self._prefill_traces += 1  # side effect: once per shape bucket
             batch = {"tokens": tokens}
             return T.prefill(params, mc, batch, cache1,
-                             attn_impl=ec.attn_impl, last_index=last_index)
+                             attn_impl=ec.attn_impl, last_index=last_index,
+                             mesh=mesh)
 
         if mesh is None:
             self._prefill = jax.jit(_prefill_fn)
@@ -232,7 +253,6 @@ class InferenceEngine:
         self._chunk_resumed: Dict[int, bool] = {}
         self.num_chunk_dispatches = 0
         self._chunk_traces = 0
-        self._chunk_warned = False
 
         # ---- KV offload tier (offload_job/restore_job) ----
         #: job_id -> host-memory copy of the slot cache + decode bookkeeping
@@ -243,6 +263,17 @@ class InferenceEngine:
         #: first decode step — the live counterpart of the simulator's
         #: recompute charge (``SimExecutor.recompute_prefill_tokens``)
         self.resume_context_tokens = 0
+
+    # ------------------------------------------------------------------ #
+    def _warn_once(self, key: str, msg: str) -> None:
+        """Emit a ``UserWarning`` at most ONCE per engine per ``key`` — the
+        shared guard behind every loud-fallback site (pallas-under-mesh,
+        unsupported chunked prefill).  Per-dispatch repetition would bury
+        the reason; the message always carries it."""
+        if key in self._warned:
+            return
+        self._warned.add(key)
+        warnings.warn(msg, UserWarning, stacklevel=3)
 
     # ------------------------------------------------------------------ #
     def _canon_cache(self, cache):
@@ -459,7 +490,8 @@ class InferenceEngine:
                     cache, toks, alive, rng = carry
                     logits, cache = T.decode_step(params, mc, toks, cache,
                                                   attn_impl=ec.attn_impl,
-                                                  active=alive)
+                                                  active=alive,
+                                                  mesh=self.mesh)
                     rng, sub = jax.random.split(rng)
                     nxt = sample(logits[:, -1, :], sub, ec.sampler,
                                  active=alive, pad_token=PAD_ID)[:, None]
@@ -625,13 +657,12 @@ class InferenceEngine:
                 self.restore_job(job)
         chunked = prefill_chunk is not None
         if chunked and not self.chunk_supported():
-            if not self._chunk_warned:
-                warnings.warn(
-                    f"prefill_chunk is not supported for "
-                    f"family={self.model_cfg.family!r} with this cache "
-                    "(ring/quantized KV or recurrent state); falling back "
-                    "to one-shot prefill", UserWarning, stacklevel=2)
-                self._chunk_warned = True
+            self._warn_once(
+                "chunk_fallback",
+                f"prefill_chunk is not supported for "
+                f"family={self.model_cfg.family!r} with this cache "
+                "(ring/quantized KV or recurrent state); falling back "
+                "to one-shot prefill")
             chunked = False
         if chunked:
             for job in jobs:

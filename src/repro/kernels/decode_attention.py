@@ -10,6 +10,13 @@ instead of an inter-SM reduction pass.
 Per-sequence dynamic state (valid cache length, absolute query position)
 arrives via scalar prefetch (SMEM) so slots at different generation depths
 batch together — exactly what ELIS's continuous batching produces.
+
+Under a tensor-parallel mesh, :func:`flash_decode_sharded` runs the same
+kernel per shard via ``shard_map`` over the TP axis: every (batch, head)
+grid cell is independent (the online-softmax state is per-head), so
+splitting the Q/KV head axes across devices needs no cross-device
+collective and is **bit-identical** to the single-device kernel.  See
+``docs/kernels.md`` for the full contract.
 """
 from __future__ import annotations
 
@@ -232,3 +239,62 @@ def flash_decode(
         out_shape=jax.ShapeDtypeStruct((b, 1, h, d), q.dtype),
         interpret=interpret,
     )(kv_len, q_offset, q, k, v)
+
+
+def flash_decode_sharded(
+    q: jnp.ndarray,  # (B, 1, H, D), heads sharded on ``axis``
+    k: jnp.ndarray,  # (B, L, KH, D), kv heads sharded on ``axis``
+    v: jnp.ndarray,
+    *,
+    kv_len: jnp.ndarray,    # (B,) or scalar, replicated
+    q_offset: jnp.ndarray,  # (B,) or scalar, replicated
+    mesh,
+    axis: str = "model",
+    window: Optional[int] = None,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """:func:`flash_decode` under a tensor-parallel mesh.
+
+    Wraps the kernel in ``shard_map`` over the ``axis`` mesh axis with the
+    Q and KV head axes partitioned (the ``kv_shard="heads"`` slot-cache
+    layout) and the slot/batch axis plus the per-slot ``kv_len`` /
+    ``q_offset`` vectors replicated.  Each shard attends over its local
+    KV heads only; since every (batch, head) cell of the kernel grid is
+    independent, no collective runs inside the kernel and the stitched
+    output is bit-identical to the single-device kernel.
+
+    Requires both head axes divisible by the mesh-axis size so each shard
+    holds whole heads at the same GQA ratio (``H/tp ÷ KH/tp = H ÷ KH``);
+    indivisible layouts (KV replicated by ``sanitize_specs``) must stay on
+    the XLA path — the per-shard kernel would index the wrong KV head.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    tp = int(dict(zip(mesh.axis_names, mesh.devices.shape))[axis])
+    if h % tp or kh % tp:
+        raise ValueError(
+            f"flash_decode_sharded: heads ({h} q / {kh} kv) must divide the "
+            f"'{axis}' mesh axis of size {tp} — this layout replicates KV "
+            "and must use the XLA decode path")
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    q_offset = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+
+    def local(q_, k_, v_, kv_len_, q_offset_):
+        return flash_decode(q_, k_, v_, kv_len=kv_len_, q_offset=q_offset_,
+                            window=window, block_k=block_k,
+                            interpret=interpret)
+
+    head_spec = P(None, None, axis, None)
+    return shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(head_spec, head_spec, head_spec, P(None), P(None)),
+        out_specs=head_spec,
+        # pallas_call carries no replication rule; the output really is
+        # head-sharded, so skipping the rep check is sound here
+        check_rep=False,
+    )(q, k, v, kv_len, q_offset)

@@ -32,9 +32,21 @@ def flash_attention(q, k, v, *, causal: bool = True,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("window", "block_k"))
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "mesh",
+                                             "shard_axis"))
 def flash_decode(q, k, v, *, kv_len, q_offset,
-                 window: Optional[int] = None, block_k: int = 128):
+                 window: Optional[int] = None, block_k: int = 128,
+                 mesh=None, shard_axis: str = "model"):
+    """Flash-decode dispatch.  With ``mesh`` (a static arg, so single- and
+    multi-device callers never share a stale trace) the kernel runs
+    ``shard_map``-ped over ``shard_axis`` with Q/KV heads partitioned —
+    bit-identical per head to the single-device kernel."""
+    if mesh is not None:
+        return _dec.flash_decode_sharded(
+            q, k, v, kv_len=kv_len, q_offset=q_offset, mesh=mesh,
+            axis=shard_axis, window=window, block_k=block_k,
+            interpret=_interpret(),
+        )
     return _dec.flash_decode(
         q, k, v, kv_len=kv_len, q_offset=q_offset, window=window,
         block_k=block_k, interpret=_interpret(),

@@ -237,6 +237,46 @@ def shardings(mesh, spec_tree):
     )
 
 
+def pallas_decode_support(cfg, mesh) -> Optional[str]:
+    """Why the mesh-aware Pallas decode kernel can NOT serve (cfg, mesh) —
+    or ``None`` when it can (DESIGN.md §11, docs/kernels.md).
+
+    The supported layout is exactly the one :func:`engine_shardings`
+    produces with divisible heads: a single-axis ``("model",)`` TP mesh,
+    KV heads on "model" (``kv_shard="heads"``), slots replicated.  There
+    the ``shard_map``-wrapped kernel attends each shard's local heads with
+    no cross-device collectives and is bit-identical to the single-device
+    kernel.  Anything else returns a reason string, prefixed with its
+    category (``mesh:`` / ``family:`` / ``layout:``), and the engine keeps
+    the loud XLA fallback for it:
+
+    * ``mesh:`` — not a single ``("model",)`` axis (the wrapper does not
+      compose with data/pod axes inside one jit).
+    * ``family:`` — ssm decode is a recurrent step with no attention read;
+      there is no decode kernel to shard.
+    * ``layout:`` — head axes do not divide the model axis.  For that
+      layout ``sanitize_specs`` *replicates* KV, and the per-shard kernel
+      would index the wrong local KV head (it assumes the same GQA ratio
+      per shard), so decode must stay on XLA.
+    """
+    axes = tuple(mesh.axis_names)
+    if axes != ("model",):
+        return (f"mesh: axes {axes} — the shard_map decode wrapper supports "
+                "single-axis ('model',) TP meshes only")
+    tp = int(mesh.devices.shape[0])
+    if cfg.family == "ssm":
+        return ("family: ssm decode is a recurrent step with no attention "
+                "read — there is no decode kernel to shard")
+    if cfg.n_kv_heads <= 0:
+        return "family: config has no KV attention heads"
+    if cfg.n_heads % tp or cfg.n_kv_heads % tp:
+        return (f"layout: heads ({cfg.n_heads} q / {cfg.n_kv_heads} kv) do "
+                f"not divide the 'model' axis (size {tp}) — "
+                "engine_shardings replicates KV for this layout, so decode "
+                "stays on the XLA path")
+    return None
+
+
 def engine_shardings(mesh, cfg, params, cache
                      ) -> Tuple[Any, Any, NamedSharding]:
     """Sharding trees for a tensor-parallel :class:`InferenceEngine`.
@@ -251,7 +291,15 @@ def engine_shardings(mesh, cfg, params, cache
     meshes prefer replicated KV over the 32k-context seq-shard fallback).
     The cache tree's NamedShardings are shape-agnostic on the slot axis, so
     one tree serves both the persistent ``max_slots`` cache and every
-    bucketed prefill sub-cache."""
+    bucketed prefill sub-cache.
+
+    These head-axis cache shardings are exactly what the mesh-aware Pallas
+    decode kernel (``kernels.decode_attention.flash_decode_sharded``)
+    expects: its ``shard_map`` in_specs partition Q/K/V on the head axis
+    over "model" and replicate the per-slot ``len`` vector, so the KV
+    blocks each shard reads are already local — no resharding between the
+    cache and the kernel.  :func:`pallas_decode_support` reports whether a
+    (cfg, mesh) pair satisfies that contract."""
     model_size = int(dict(zip(mesh.axis_names, mesh.devices.shape))["model"])
     pspec = sanitize_specs(mesh, param_pspecs(cfg, params), params)
     cspec = sanitize_specs(

@@ -379,6 +379,7 @@ def attention_block(
     attn_impl: str = "xla",
     active=None,
     valid_len=None,
+    mesh=None,
 ) -> Tuple[jnp.ndarray, object]:
     """Full attention block: proj -> rope -> (cache update) -> sdpa -> out proj.
 
@@ -390,6 +391,12 @@ def attention_block(
     write (their buffer row is bit-identical afterwards) — the caller
     freezes their ``len`` to match, so a frozen slot's cache is untouched
     by the dispatch it shared with live slots.
+    Tensor-parallel decode: ``mesh`` (a single-axis ``("model",)`` mesh)
+    makes the ``attn_impl="pallas"`` decode read run the flash-decode
+    kernel ``shard_map``-ped over the model axis — Q/KV heads partitioned
+    exactly as ``engine_shardings`` places them, per-slot lengths
+    replicated, no collective inside the kernel (docs/kernels.md).
+    Callers must only pass a mesh when both head axes divide it.
     Chunked prefill: ``cache`` given AND x is (B, C>1, d) — the C fresh
     tokens start at absolute position ``cur_index`` (B,) and only the first
     ``valid_len`` (B,) of them are real (the rest is bucket padding).  The
@@ -479,7 +486,8 @@ def attention_block(
                 from repro.kernels import ops as kops
 
                 out = kops.flash_decode(q, kread, vread, kv_len=cur + 1,
-                                        q_offset=cur, window=window)
+                                        q_offset=cur, window=window,
+                                        mesh=mesh)
             else:
                 out = sdpa(q, kread, vread, causal=True, q_offset=cur,
                            kv_len=cur + 1, window=window)

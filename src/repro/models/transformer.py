@@ -186,11 +186,12 @@ def unembed(params: Params, cfg, h: jnp.ndarray) -> jnp.ndarray:
 
 
 def _dense_body(cfg, attn_impl, moe_impl, lp: Params, x, cos_sin,
-                cache=None, cur_index=None, active=None, valid_len=None):
+                cache=None, cur_index=None, active=None, valid_len=None,
+                mesh=None):
     h = L.apply_norm(cfg, lp["attn_norm"], x)
     attn_out, kv = L.attention_block(
         lp["attn"], cfg, h, cos_sin, cache=cache, cur_index=cur_index,
-        attn_impl=attn_impl, active=active, valid_len=valid_len,
+        attn_impl=attn_impl, active=active, valid_len=valid_len, mesh=mesh,
     )
     x = x + attn_out
     h = L.apply_norm(cfg, lp["mlp_norm"], x)
@@ -401,12 +402,21 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None,
 
 def prefill(params: Params, cfg, batch: Dict, cache: Cache,
             *, attn_impl: str = "xla", moe_impl: str = "dense",
-            last_index: Optional[jnp.ndarray] = None):
+            last_index: Optional[jnp.ndarray] = None, mesh=None):
     """Process the full prompt, fill the cache, return last-position logits.
 
     ``last_index`` (B,) selects the position whose logits are returned —
     engines right-pad prompts to buckets and need the *true* last position.
+
+    ``mesh`` marks a sharded (TP) caller.  The prefill-side Pallas kernels
+    (flash_attention, ssd_scan) are single-device, so under a mesh
+    ``attn_impl="pallas"`` downgrades to ``"xla"`` here — numerics are
+    identical either way (the xla==pallas identity contract, CI-asserted)
+    and prefill is off the steady-state decode hot loop.  Mesh-aware decode
+    stays on the real kernel via :func:`decode_step` (DESIGN.md §11).
     """
+    if mesh is not None and attn_impl == "pallas":
+        attn_impl = "xla"
     h, pos = embed_inputs(params, cfg, batch)
     s = h.shape[1]
     cos_sin = L.positional_cos_sin(cfg, pos) if cfg.rope_type in ("rope", "mrope") else None
@@ -607,7 +617,7 @@ def prefill_chunk(params: Params, cfg, batch: Dict, cache: Cache,
 
 def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
                 *, attn_impl: str = "xla", moe_impl: str = "grouped",
-                active: Optional[jnp.ndarray] = None):
+                active: Optional[jnp.ndarray] = None, mesh=None):
     """One-token auto-regressive step.  tokens (B, 1) -> (logits, cache).
 
     ``active`` (B,) bool — the continuous-batching mask: rows marked
@@ -618,6 +628,13 @@ def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
     routes the attention read through the Pallas flash-decode kernel
     (:mod:`repro.kernels.decode_attention`) with the per-slot ``len`` vector
     as kv lengths; ``"xla"`` is the einsum reference path.
+
+    ``mesh`` — when the caller runs under a TP mesh with head-sharded KV
+    (``kv_shard="heads"``), passing the mesh routes the Pallas read through
+    the ``shard_map``-wrapped kernel so each shard attends over its local
+    heads (DESIGN.md §11).  Only valid for layouts where the head axes
+    divide the ``"model"`` mesh axis — the engine gates this via
+    :func:`repro.launch.partition.pallas_decode_support`.
     """
     b = tokens.shape[0]
     cur = jnp.broadcast_to(jnp.asarray(cache["len"]), (b,))  # per-slot lengths
@@ -647,7 +664,8 @@ def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
                 lp, kb, vb = inp
                 lc = KVCache(kb, vb, ring)
             x, nkv, a = _dense_body(cfg, attn_impl, moe_impl, lp, x, cos_sin,
-                                    cache=lc, cur_index=cur, active=active)
+                                    cache=lc, cur_index=cur, active=active,
+                                    mesh=mesh)
             if quant:
                 return (x, aux + a), (nkv.k, nkv.v, nkv.k_scale, nkv.v_scale)
             return (x, aux + a), (nkv.k, nkv.v)
@@ -686,7 +704,7 @@ def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
             x, ngst = layer_scan(inner, x, (gp, gst))
             x, nkv, _ = _dense_body(cfg, attn_impl, moe_impl, shared, x,
                                     cos_sin, cache=KVCache(kb, vb, ring),
-                                    cur_index=cur, active=active)
+                                    cur_index=cur, active=active, mesh=mesh)
             return x, (ngst, nkv.k, nkv.v)
 
         h, (ngroups, knew, vnew) = layer_scan(
@@ -708,7 +726,7 @@ def decode_step(params: Params, cfg, tokens: jnp.ndarray, cache: Cache,
             hh = L.apply_norm(cfg, lp["attn_norm"], x)
             attn_out, nkv = L.attention_block(
                 lp["attn"], cfg, hh, None, cache=KVCache(kb, vb),
-                cur_index=cur, attn_impl=attn_impl, active=active,
+                cur_index=cur, attn_impl=attn_impl, active=active, mesh=mesh,
             )
             x = x + attn_out
             hh = L.apply_norm(cfg, lp["cross_norm"], x)
