@@ -32,6 +32,7 @@ def main() -> None:
         multi_node,
         predictor_calibration,
         prefill_preempt,
+        rank_sched,
         roofline,
         scheduler_overhead,
         sim_scale,
@@ -64,6 +65,10 @@ def main() -> None:
              rows, regime="biased_oracle", calibrate="ema",
              risk_quantile=None)["pred_bias"])
          + ";coverage_q0.9=" + str(rows[0].get("coverage_q0.9"))),
+        ("rank_sched", rank_sched.run,
+         lambda rows: f"tau_regression={rows[0]['tau_regression']};"
+                      f"tau_rank={rows[0]['tau_rank']};"
+                      f"rank_isrtf_jct={rank_sched.cell(rows, predictor='ranked', policy='isrtf', calibrate='none')['jct_mean']}"),
         ("multi_node", multi_node.run,
          lambda rows: "hetero_fcfs_lpw_gain_pct=" + "/".join(
              f"{100 * (1 - multi_node.cell(rows, cluster='hetero', ordering='fcfs', n_nodes=n, placement='least_predicted_work', rebalance=False)['jct_mean'] / multi_node.cell(rows, cluster='hetero', ordering='fcfs', n_nodes=n, placement='least_jobs', rebalance=False)['jct_mean']):.1f}"

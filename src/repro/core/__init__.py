@@ -13,7 +13,12 @@ from repro.core.load_balancer import (
     PlacementPolicy,
     make_placement,
 )
-from repro.core.metrics import improvement, prediction_stats, summarize
+from repro.core.metrics import (
+    improvement,
+    kendall_tau,
+    prediction_stats,
+    summarize,
+)
 from repro.core.predictor import (
     BGEPredictor,
     CalibrationConfig,
@@ -24,6 +29,8 @@ from repro.core.predictor import (
     NoisyOraclePredictor,
     OraclePredictor,
     PredictorConfig,
+    RankedPredictor,
+    RankingConfig,
     make_predictor,
     predict_lengths,
     wrap_calibration,
@@ -83,6 +90,8 @@ __all__ = [
     "PredictorConfig",
     "PreemptionConfig",
     "PriorityBuffer",
+    "RankedPredictor",
+    "RankingConfig",
     "Request",
     "RequestHandle",
     "RequestOptions",
@@ -92,6 +101,7 @@ __all__ = [
     "TERMINAL_STATES",
     "TokenChunk",
     "improvement",
+    "kendall_tau",
     "make_placement",
     "make_policy",
     "make_predictor",

@@ -41,6 +41,21 @@ Calibration wrappers (compose over any base via :func:`make_predictor`):
   window of multiplicative residuals (split-conformal with the finite-sample
   ``ceil((n+1)q)/n`` correction), optionally Mondrian-bucketed by step.
 
+Learning-to-rank (the two-head subsystem):
+
+* ``PredictorConfig(ranking=RankingConfig(...))`` grows a sibling *ranking
+  head* on the shared BGE trunk, trained jointly with the regression head
+  (pairwise-margin or listwise loss from ``repro.models.objective``).  Its
+  score lands on :attr:`LengthPrediction.rank_score` — pool-ordering only;
+  the calibrated ``mean`` keeps feeding ``Job.expected_remaining`` and all
+  cluster predicted-work accounting.
+* :class:`RankedPredictor` — the serving adapter (``make_predictor
+  ("ranked", bge=...)``): one fused dispatch fills both heads, and
+  ``observe()`` harvests completed-job pairs from a rolling window into
+  deterministic online head updates (CANCELLED/EXPIRED stay censored and
+  never form pairs).  Composes under the calibration wrappers, which
+  adjust magnitudes and pass ``rank_score`` through untouched.
+
 The scheduler's hot path stays a single *shape-bucketed* dispatch per
 scheduling window (batch padded to power-of-two buckets, sequence to the
 ``seq_bucket`` ladder); ``BGEPredictor.num_traces`` exposes the compile
@@ -51,7 +66,7 @@ from __future__ import annotations
 
 import math
 from collections import OrderedDict, deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import (
     Deque,
     Dict,
@@ -68,15 +83,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.job import TERMINAL_STATES, Job, JobState
+from repro.core.metrics import kendall_tau
 from repro.data.dataset import (
     WINDOW,
     StepSample,
     batch_bucket,
     seq_bucket,
 )
-from repro.data.tokenizer import CLS_ID, SEP_ID
+from repro.data.tokenizer import CLS_ID, PAD_ID, SEP_ID
 from repro.models import encoder as E
 from repro.models.layers import dense_init
+from repro.models.objective import RankingConfig, ranking_loss
 from repro.training import AdamWConfig, train
 
 
@@ -158,6 +175,12 @@ class LengthPrediction:
     mean: float
     std: float = 0.0
     quantiles: Tuple[Tuple[float, float], ...] = ()
+    #: ranking-head score: a token-scale pseudo-length whose ORDER across a
+    #: pool is meaningful but whose magnitude is uncalibrated.  The
+    #: scheduler orders on it under ``SchedulerConfig.rank_by =
+    #: "rank_score"``; ``expected_remaining`` / predicted-work accounting
+    #: never read it.  None for single-head predictors.
+    rank_score: Optional[float] = None
 
     def quantile(self, q: float) -> float:
         """The q-th quantile of the predicted remaining length."""
@@ -338,6 +361,11 @@ class PredictorConfig:
     freeze_encoder: bool = False   # paper freezes pretrained BGE; ours trains
     lr: float = 1e-4               # paper: 1e-4
     predict_log: bool = True       # regress log(remaining) (skew-friendly)
+    #: presence enables the sibling learning-to-rank head on the shared
+    #: trunk (trained jointly; see repro.models.objective.RankingConfig).
+    #: None keeps the parameter tree and every trace bit-identical to the
+    #: single-head predictor.
+    ranking: Optional[RankingConfig] = None
 
 
 def init_head(key, in_dim: int, hidden: int, n_layers: int,
@@ -390,6 +418,13 @@ class BGEPredictor(LengthPredictor):
             "head": init_head(k2, 2 * cfg.encoder.d_model, cfg.fc_hidden,
                               cfg.n_fc_layers),
         }
+        if cfg.ranking is not None:
+            # sibling ranking head on the shared trunk; keyed off a fold of
+            # the root key so the encoder/head init above stays bit-identical
+            # to the single-head model at the same seed
+            k3 = jax.random.fold_in(key, 2)
+            self.params["rank_head"] = init_head(
+                k3, 2 * cfg.encoder.d_model, cfg.fc_hidden, cfg.n_fc_layers)
         self._n_traces = 0
         self.num_dispatches = 0
         #: log-space residual stats from ``fit`` (0, 0 = unknown spread)
@@ -420,22 +455,26 @@ class BGEPredictor(LengthPredictor):
         raw = apply_head(params["head"], feats)
         if self.cfg.predict_log:
             # wide clip: the gradient must not die at init (raw ≈ prior)
-            return jnp.exp(jnp.clip(raw, -2.0, 8.0))  # e^8 ≈ 3k > MAX_OUTPUT
-        return jnp.maximum(raw, 1.0)
+            out = jnp.exp(jnp.clip(raw, -2.0, 8.0))  # e^8 ≈ 3k > MAX_OUTPUT
+        else:
+            out = jnp.maximum(raw, 1.0)
+        if self.cfg.ranking is None:
+            return out
+        # ranking head shares the trunk — same dispatch, no extra encoder
+        # pass.  exp keeps the score a token-scale pseudo-length, so it
+        # composes with the scheduler's banding/aging/debt arithmetic; only
+        # its ORDER is trained (magnitudes stay the regression head's job)
+        rank_raw = apply_head(params["rank_head"], feats)
+        return out, jnp.exp(jnp.clip(rank_raw, -2.0, 8.0))
 
-    def predict_tokens(self, token_lists: Sequence[Sequence[int]]) -> np.ndarray:
-        """One batched inference dispatch, shape-bucketed.
+    def _run_tokens(self, token_lists: Sequence[Sequence[int]]):
+        """Pad to the (batch, seq) bucket and run ONE jitted dispatch.
 
-        The batch dimension is padded to the next power of two and the
-        sequence dimension to the ``seq_bucket`` ladder (capped at
-        ``max_len``), so the jitted apply compiles once per (batch, seq)
-        bucket instead of once per raw pool shape.  Padding rows are fully
-        masked (the encoder's masked attention/pooling make them inert) and
-        sliced off before returning."""
+        Returns ``(raw_output, b)`` where ``raw_output`` is the jit result
+        — a ``(means, rank_scores)`` tuple when the ranking head is enabled
+        — and ``b`` the true batch size for slicing padding off."""
         ml = self.cfg.max_len
         b = len(token_lists)
-        if b == 0:
-            return np.zeros((0,))
         self.num_dispatches += 1
         longest = max(min(len(t), ml) for t in token_lists)
         bb = batch_bucket(b)
@@ -446,7 +485,36 @@ class BGEPredictor(LengthPredictor):
             t = list(t)[:sl]
             toks[i, : len(t)] = t
             mask[i, : len(t)] = True
-        return np.asarray(self._apply(self.params, toks, mask))[:b]
+        return self._apply(self.params, toks, mask), b
+
+    def predict_tokens(self, token_lists: Sequence[Sequence[int]]) -> np.ndarray:
+        """One batched inference dispatch, shape-bucketed.
+
+        The batch dimension is padded to the next power of two and the
+        sequence dimension to the ``seq_bucket`` ladder (capped at
+        ``max_len``), so the jitted apply compiles once per (batch, seq)
+        bucket instead of once per raw pool shape.  Padding rows are fully
+        masked (the encoder's masked attention/pooling make them inert) and
+        sliced off before returning."""
+        if len(token_lists) == 0:
+            return np.zeros((0,))
+        out, b = self._run_tokens(token_lists)
+        if self.cfg.ranking is not None:
+            out = out[0]
+        return np.asarray(out)[:b]
+
+    def predict_tokens_ranked(
+            self, token_lists: Sequence[Sequence[int]]
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Both heads from the SAME single dispatch: (means, rank_scores)."""
+        if self.cfg.ranking is None:
+            raise ValueError(
+                "ranking head disabled — construct the predictor with "
+                "PredictorConfig(ranking=RankingConfig(...))")
+        if len(token_lists) == 0:
+            return np.zeros((0,)), np.zeros((0,))
+        (m, r), b = self._run_tokens(token_lists)
+        return np.asarray(m)[:b], np.asarray(r)[:b]
 
     # -------------------------------------------------------------- #
     def _job_input(self, job: Job) -> List[int]:
@@ -461,6 +529,19 @@ class BGEPredictor(LengthPredictor):
             return np.zeros((0,))
         return self.predict_tokens([self._job_input(j) for j in jobs])
 
+    def predict(self, jobs: Sequence[Job]) -> List[LengthPrediction]:
+        jobs = list(jobs)
+        if not jobs:
+            return []
+        if self.cfg.ranking is None:
+            return super().predict(jobs)
+        # two-head path: one fused dispatch fills both heads, and the
+        # ranking score rides on the prediction next to the calibrated mean
+        means, ranks = self.predict_tokens_ranked(
+            [self._job_input(j) for j in jobs])
+        return [replace(self._prediction(j, float(m)), rank_score=float(r))
+                for j, m, r in zip(jobs, means, ranks)]
+
     def _prediction(self, job: Job, mean: float) -> LengthPrediction:
         if self.resid_sigma <= 0.0:
             return LengthPrediction(mean=mean)
@@ -474,7 +555,12 @@ class BGEPredictor(LengthPredictor):
 
     # -------------------------------------------------------------- #
     def loss_fn(self, params, batch):
-        pred = self._apply_fn(params, batch["tokens"], batch["mask"])
+        out = self._apply_fn(params, batch["tokens"], batch["mask"])
+        rank_pred = None
+        if self.cfg.ranking is not None:
+            pred, rank_pred = out
+        else:
+            pred = out
         target = batch["labels"]
         if self.cfg.predict_log:
             err = jnp.log(pred) - jnp.log(jnp.maximum(target, 1.0))
@@ -484,7 +570,18 @@ class BGEPredictor(LengthPredictor):
         huber = jnp.where(jnp.abs(err) < 1.0, 0.5 * err * err,
                           jnp.abs(err) - 0.5)
         mae = jnp.mean(jnp.abs(pred - target))
-        return jnp.mean(huber), {"mae": mae}
+        total = jnp.mean(huber)
+        metrics = {"mae": mae}
+        if rank_pred is not None:
+            # joint training: rank scores compared in log space (the exact
+            # inverse of the head's exp within the clip window), pairs
+            # restricted to valid (unpadded) rows
+            valid = batch["mask"].any(axis=-1)
+            rloss = ranking_loss(self.cfg.ranking, jnp.log(rank_pred),
+                                 target, valid, steps=batch.get("steps"))
+            total = total + self.cfg.ranking.weight * rloss
+            metrics["rank_loss"] = rloss
+        return total, metrics
 
     def fit(self, train_samples: List[StepSample], *, num_steps: int = 600,
             batch_size: int = 32, log_fn=None) -> Dict:
@@ -498,6 +595,9 @@ class BGEPredictor(LengthPredictor):
                 "head": jax.tree_util.tree_map(lambda _: True,
                                                self.params["head"]),
             }
+            if "rank_head" in self.params:
+                mask["rank_head"] = jax.tree_util.tree_map(
+                    lambda _: True, self.params["rank_head"])
         it = batch_iterator(train_samples, batch_size, self.cfg.max_len)
         opt = AdamWConfig(lr=self.cfg.lr, warmup_steps=max(num_steps // 20, 1),
                           total_steps=num_steps, weight_decay=0.01)
@@ -541,16 +641,20 @@ class BGEPredictor(LengthPredictor):
                                          float(np.std(r)))
 
     def _predict_samples(self, samples: Sequence[StepSample],
-                         chunk: int = 256) -> np.ndarray:
+                         chunk: int = 256, *,
+                         want_rank: bool = False) -> np.ndarray:
         """Chunked, bucket-padded inference over pre-built StepSamples.
 
         Pads PER CHUNK (batch dimension to the power-of-two bucket, sequence
         to the configured ``max_len``) instead of materialising one giant
         padded array for the whole sample list — evaluating a large trace
         set stays O(chunk) memory and compiles at most one shape per batch
-        bucket."""
-        from repro.data.tokenizer import PAD_ID
-
+        bucket.  ``want_rank`` selects the ranking head's scores instead of
+        the regression means (two-head predictors only)."""
+        if want_rank and self.cfg.ranking is None:
+            raise ValueError(
+                "ranking head disabled — construct the predictor with "
+                "PredictorConfig(ranking=RankingConfig(...))")
         ml = self.cfg.max_len
         preds = []
         for i in range(0, len(samples), chunk):
@@ -563,8 +667,10 @@ class BGEPredictor(LengthPredictor):
                 t = s.tokens[:ml]
                 toks[r, : len(t)] = t
                 msk[r, : len(t)] = True
-            preds.append(
-                np.asarray(self._apply(self.params, toks, msk))[: len(part)])
+            out = self._apply(self.params, toks, msk)
+            if self.cfg.ranking is not None:
+                out = out[1] if want_rank else out[0]
+            preds.append(np.asarray(out)[: len(part)])
         return np.concatenate(preds) if preds else np.zeros((0,))
 
     # -------------------------------------------------------------- #
@@ -577,7 +683,8 @@ class BGEPredictor(LengthPredictor):
         chunked shapes stay on the batch-bucket ladder so traces are
         bounded."""
         if not samples:
-            return {"mae": float("nan"), "rmse": float("nan"), "r2": float("nan")}
+            return {"mae": float("nan"), "rmse": float("nan"),
+                    "r2": float("nan"), "kendall_tau": float("nan")}
         pred = self._predict_samples(samples)
         y = np.array([s.remaining for s in samples], np.float32)
         mae = float(np.mean(np.abs(pred - y)))
@@ -585,7 +692,21 @@ class BGEPredictor(LengthPredictor):
         ss_res = float(np.sum((pred - y) ** 2))
         ss_tot = float(np.sum((y - y.mean()) ** 2))
         r2 = 1.0 - ss_res / max(ss_tot, 1e-9)
-        return {"mae": mae, "rmse": rmse, "r2": r2}
+        return {"mae": mae, "rmse": rmse, "r2": r2,
+                "kendall_tau": kendall_tau(pred, y)}
+
+    def evaluate_rank(self, samples: List[StepSample]) -> Dict[str, float]:
+        """Kendall-τ of the pool ordering — the metric ISRTF actually needs.
+
+        Scores come from the ranking head when enabled and from the
+        regression mean otherwise, so single-head and two-head predictors
+        are directly comparable at equal encoder budget."""
+        if not samples:
+            return {"kendall_tau": float("nan")}
+        scores = self._predict_samples(
+            samples, want_rank=self.cfg.ranking is not None)
+        y = np.array([s.remaining for s in samples], np.float32)
+        return {"kendall_tau": kendall_tau(scores, y)}
 
     def evaluate_per_step(self, samples: List[StepSample],
                           max_step: int = 6) -> Dict[int, float]:
@@ -763,9 +884,12 @@ class EMADebiasedPredictor(CalibratedPredictor):
         f = self._correction(self._bucket(job.tokens_generated))
         if f == 1.0:
             return pred
+        # rank_score passes through untouched: it is a pool-relative
+        # ordering, not a magnitude, so debiasing must not rescale it
         return LengthPrediction(
             mean=pred.mean * f, std=pred.std * f,
             quantiles=tuple((q, v * f) for q, v in pred.quantiles),
+            rank_score=pred.rank_score,
         )
 
     def _reference_mean(self, base_pred: LengthPrediction,
@@ -848,7 +972,8 @@ class ConformalPredictor(CalibratedPredictor):
         ladder = tuple((q, pred.mean * self._rung(s, q))
                        for q in QUANTILE_GRID)
         return LengthPrediction(mean=pred.mean, std=pred.std,
-                                quantiles=ladder)
+                                quantiles=ladder,
+                                rank_score=pred.rank_score)
 
     def _reference_mean(self, base_pred: LengthPrediction,
                         adjusted: LengthPrediction) -> float:
@@ -857,6 +982,150 @@ class ConformalPredictor(CalibratedPredictor):
     def _update(self, bucket: int, predicted: float, actual: float) -> None:
         self._scores[bucket].append(actual / max(predicted, 1e-6))
         self._version += 1  # invalidate every memoised sorted window
+
+
+# --------------------------------------------------------------------------- #
+# RankedPredictor — serving adapter for the two-head model
+# --------------------------------------------------------------------------- #
+
+
+class RankedPredictor(LengthPredictor):
+    """Serving-time learning-to-rank predictor over a two-head BGE model.
+
+    ``predict(pool)`` delegates to the two-head :class:`BGEPredictor` (one
+    fused dispatch fills both heads; every :class:`LengthPrediction`
+    carries ``rank_score`` next to the calibrated ``mean``) and logs the
+    inputs it scored.  ``observe()`` resolves those logs into ground-truth
+    remaining lengths, keeps them in a rolling window, and every
+    ``update_every`` resolved observations harvests ``pairs_per_update``
+    record pairs — drawn WITHOUT replacement by a seeded RNG, so the pair
+    sequence is a pure function of the observation order and the seed —
+    into one fixed-shape SGD step on BOTH heads (encoder frozen online;
+    the joint :meth:`BGEPredictor.loss_fn` supplies the regression Huber
+    term and the pairwise/listwise ranking term).
+
+    Censoring matches :class:`CalibratedPredictor`: CANCELLED/EXPIRED jobs
+    have their logs dropped before any pair can form — an aborted
+    request's realised length says nothing about what the model would have
+    generated.  ``pair_log`` records the (job_id, job_id) pairs that
+    entered training batches; the censoring/determinism tests read it.
+
+    Composes under the calibration wrappers (``make_predictor("ranked",
+    bge=..., calibration="ema+conformal")``): they adjust magnitudes, pass
+    ``rank_score`` through untouched, and forward ``observe`` here first.
+    """
+
+    #: logged-but-unresolved prediction inputs kept per job (oldest dropped)
+    MAX_PENDING_PER_JOB = 8
+    #: jobs tracked at once (serving cleans up via terminal observes)
+    MAX_PENDING_JOBS = 4096
+
+    def __init__(self, base: "BGEPredictor", *, seed: int = 0,
+                 window: int = 256, pairs_per_update: int = 8,
+                 update_every: int = 32, online_lr: float = 1e-4):
+        if not isinstance(base, BGEPredictor) or base.cfg.ranking is None:
+            raise ValueError(
+                "RankedPredictor needs a two-head BGEPredictor — construct "
+                "it with PredictorConfig(ranking=RankingConfig(...))")
+        self.base = base
+        self._rng = np.random.RandomState(seed)
+        self._pending: "OrderedDict[int, List[Tuple[int, Tuple[int, ...]]]]" \
+            = OrderedDict()
+        #: rolling window of resolved ground truth:
+        #: (job_id, input_tokens, actual_remaining, step_at_prediction)
+        self._records: Deque[Tuple[int, Tuple[int, ...], float, int]] = \
+            deque(maxlen=window)
+        self.pairs_per_update = pairs_per_update
+        self.update_every = update_every
+        self.online_lr = online_lr
+        #: resolved ground-truth records consumed so far
+        self.n_observed = 0
+        #: harvested training pairs so far
+        self.n_pairs = 0
+        #: online SGD steps taken so far
+        self.n_updates = 0
+        #: (job_id_a, job_id_b) pairs that entered online training batches
+        self.pair_log: List[Tuple[int, int]] = []
+        self._since_update = 0
+        self._grad = jax.jit(jax.grad(self._heads_loss))
+
+    # -- prediction path ------------------------------------------------- #
+    def predict(self, jobs: Sequence[Job]) -> List[LengthPrediction]:
+        jobs = list(jobs)
+        if not jobs:
+            return []
+        preds = self.base.predict(jobs)
+        for j in jobs:
+            entries = self._pending.setdefault(j.job_id, [])
+            self._pending.move_to_end(j.job_id)
+            entries.append((j.tokens_generated,
+                            tuple(self.base._job_input(j))))
+            if len(entries) > self.MAX_PENDING_PER_JOB:
+                del entries[0]
+            while len(self._pending) > self.MAX_PENDING_JOBS:
+                self._pending.popitem(last=False)
+        return preds
+
+    # -- feedback path --------------------------------------------------- #
+    def observe(self, job: Job, actual_remaining: float) -> None:
+        jid = job.job_id
+        if job.state in (JobState.CANCELLED, JobState.EXPIRED):
+            # censored: drop the logs BEFORE any pair can form
+            self._pending.pop(jid, None)
+            return
+        entries = self._pending.get(jid)
+        if entries:
+            total = job.tokens_generated + max(float(actual_remaining), 0.0)
+            for g, toks in entries:
+                actual = total - g
+                if actual > 0.0:
+                    self._records.append((jid, toks, actual, g // WINDOW))
+                    self.n_observed += 1
+                    self._since_update += 1
+            entries.clear()
+        if job.state in TERMINAL_STATES:
+            self._pending.pop(jid, None)
+        if self._since_update >= self.update_every:
+            self._since_update = 0
+            self._update_heads()
+
+    # -- online head training -------------------------------------------- #
+    def _heads_loss(self, heads, encoder, batch):
+        loss, _ = self.base.loss_fn({"encoder": encoder, **heads}, batch)
+        return loss
+
+    def _update_heads(self) -> None:
+        recs = list(self._records)
+        n = 2 * self.pairs_per_update
+        if len(recs) < n:
+            return
+        idx = self._rng.choice(len(recs), size=n, replace=False)
+        rows = [recs[int(i)] for i in idx]
+        self.pair_log.extend((rows[2 * t][0], rows[2 * t + 1][0])
+                             for t in range(self.pairs_per_update))
+        self.n_pairs += self.pairs_per_update
+        # fixed (n, max_len) batch shape -> the grad step compiles ONCE
+        ml = self.base.cfg.max_len
+        toks = np.full((n, ml), PAD_ID, np.int32)
+        msk = np.zeros((n, ml), bool)
+        labels = np.zeros((n,), np.float32)
+        steps = np.zeros((n,), np.int32)
+        for r, (jid, t, actual, step) in enumerate(rows):
+            t = list(t)[:ml]
+            toks[r, : len(t)] = t
+            msk[r, : len(t)] = True
+            labels[r] = actual
+            steps[r] = step
+        batch = {"tokens": toks, "mask": msk, "labels": labels,
+                 "steps": steps}
+        heads = {k: v for k, v in self.base.params.items() if k != "encoder"}
+        grads = self._grad(heads, self.base.params["encoder"], batch)
+        lr = self.online_lr
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g, heads, grads)
+        # fresh dict (no in-place mutation): callers may hold the previous
+        # params tree as a snapshot for benchmark isolation
+        self.base.params = {"encoder": self.base.params["encoder"], **new}
+        self.n_updates += 1
 
 
 # --------------------------------------------------------------------------- #
@@ -878,11 +1147,22 @@ def _make_bge(seed: int, bias: float, bge):
     return bge
 
 
+def _make_ranked(seed: int, bias: float, bge):
+    if bge is None:
+        raise ValueError(
+            "pass a trained two-head BGEPredictor via bge= "
+            "(PredictorConfig(ranking=RankingConfig(...)))")
+    if isinstance(bge, RankedPredictor):
+        return bge
+    return RankedPredictor(bge, seed=seed)
+
+
 #: base-predictor registry: name -> factory(seed, bias, bge)
 BASE_PREDICTORS = {
     "oracle": _make_oracle,
     "noisy_oracle": _make_noisy,
     "bge": _make_bge,
+    "ranked": _make_ranked,
 }
 
 

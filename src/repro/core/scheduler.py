@@ -78,6 +78,16 @@ class SchedulerConfig:
     #: predicted remaining output plus the unprefilled prompt tail
     #: (:func:`prefill_debt`).
     prefill_chunk: Optional[int] = None
+    #: what a re-predicting policy ORDERS the pool by: ``"magnitude"`` (the
+    #: calibrated mean, or its ``risk_quantile``) or ``"rank_score"`` (the
+    #: learning-to-rank head's score — ISRTF only needs the order of
+    #: remaining lengths, and a head trained to rank beats the point
+    #: regressor at exactly that).  Requires predictions carrying
+    #: :attr:`~repro.core.predictor.LengthPrediction.rank_score` (a ranked
+    #: predictor).  Either way ``Job.expected_remaining`` and all cluster
+    #: predicted-work accounting stay on the calibrated mean — rank scores
+    #: never leak into load totals (see ``cached_expected_remaining``).
+    rank_by: str = "magnitude"
 
 
 class Policy:
@@ -154,6 +164,9 @@ POLICIES = {
     "mlfq": MLFQPolicy,
 }
 
+#: valid pool-ordering sources for re-predicting policies
+RANK_BY = ("magnitude", "rank_score")
+
 
 def make_policy(cfg: SchedulerConfig, predictor: Optional[Predictor]) -> Policy:
     try:
@@ -162,6 +175,14 @@ def make_policy(cfg: SchedulerConfig, predictor: Optional[Predictor]) -> Policy:
         raise ValueError(f"unknown policy {cfg.policy!r}") from None
     if cls in (SJFPolicy, ISRTFPolicy) and predictor is None:
         raise ValueError(f"{cfg.policy} requires a predictor")
+    if cfg.rank_by not in RANK_BY:
+        raise ValueError(
+            f"unknown rank_by {cfg.rank_by!r} (choose one of {RANK_BY})")
+    if cfg.rank_by == "rank_score" and cfg.risk_quantile is not None:
+        raise ValueError(
+            "rank_by='rank_score' and risk_quantile are mutually exclusive: "
+            "the ranking head orders the pool directly, quantiles order "
+            "magnitudes — pick one")
     return cls(cfg, predictor)
 
 
@@ -201,6 +222,20 @@ def prefill_debt(cfg: SchedulerConfig, job: Job) -> float:
         0))
 
 
+def _rank_scores(preds: Sequence[LengthPrediction]) -> List[float]:
+    """Pool ordering from the ranking head — loud when it isn't there."""
+    out = []
+    for p in preds:
+        if p.rank_score is None:
+            raise ValueError(
+                "rank_by='rank_score' needs predictions carrying a "
+                "rank_score — use a two-head ranked predictor "
+                "(make_predictor('ranked', bge=...)); this predictor "
+                "returned none")
+        out.append(float(p.rank_score))
+    return out
+
+
 def score_jobs(policy: Policy, jobs: Sequence[Job], now: float) -> List[float]:
     """Fresh raw priorities for ``jobs`` — at most ONE predictor dispatch
     (batched through :func:`~repro.core.predictor.predict_lengths`, the
@@ -220,7 +255,9 @@ def score_jobs(policy: Policy, jobs: Sequence[Job], now: float) -> List[float]:
     if policy.repredicts and pred is not None:
         preds = predict_lengths(pred, jobs)
         q = policy.cfg.risk_quantile
-        if q is None:
+        if policy.cfg.rank_by == "rank_score":
+            raw = _rank_scores(preds)
+        elif q is None:
             raw = [p.mean for p in preds]
         else:
             raw = [p.quantile(q) for p in preds]
@@ -360,6 +397,14 @@ class PreemptionConfig:
     #: resume ties up host KV (and risks a second swap) longer, so the
     #: break-even tilts toward recompute for it
     swap_hold_s_per_token: float = 1e-3
+    #: watermark (in stashed context tokens) bounding the live engine's
+    #: host swap pool.  When a new swap-out would push the pool past the
+    #: watermark, the COLDEST stashed victims (oldest swap-outs) are
+    #: evicted to the recompute-fallback path with a loud once-per-engine
+    #: warning; if the fresh stash alone exceeds the pool it is refused
+    #: and the victim recomputes.  None = unbounded (the pre-watermark
+    #: behaviour).  Threaded onto each engine by ``EngineExecutor``.
+    swap_pool_tokens: Optional[int] = None
 
 
 PREEMPT_POLICIES = ("recompute", "swap", "auto")

@@ -257,6 +257,17 @@ class InferenceEngine:
         # ---- KV offload tier (offload_job/restore_job) ----
         #: job_id -> host-memory copy of the slot cache + decode bookkeeping
         self._host_stash: Dict[int, Dict] = {}
+        #: watermark (stashed context tokens) bounding the host swap pool;
+        #: None = unbounded.  ``EngineExecutor`` threads
+        #: ``PreemptionConfig.swap_pool_tokens`` here; over-watermark
+        #: swap-outs evict the COLDEST stashed victims to the
+        #: recompute-fallback path (loud, once per engine)
+        self.swap_pool_tokens: Optional[int] = None
+        #: context tokens currently held in the host stash
+        self.stash_tokens = 0
+        #: stashes evicted by the watermark (victims fell back to recompute)
+        self.n_stash_evictions = 0
+        self.stash_evicted_tokens = 0
 
         #: tokens of context re-established by resume prefills (full or
         #: chunked), INCLUDING the +1 seed token whose KV is written by the
@@ -427,10 +438,17 @@ class InferenceEngine:
         swaps it back in instead of paying recompute.  ``jax.device_get``
         pulls every shard to host under a mesh; the stash also carries the
         decode bookkeeping (last token, pending first emission, chunk
-        cursor) so a restored job continues bit-exactly."""
+        cursor) so a restored job continues bit-exactly.
+
+        With ``swap_pool_tokens`` set, the host stash is bounded: an
+        over-watermark swap-out evicts the COLDEST stashed victims (oldest
+        swap-outs, insertion order) to the recompute-fallback path; if the
+        fresh stash alone exceeds the pool it is refused (returns False, the
+        caller falls back to plain eviction + recompute)."""
         slot = self.slot_of.get(job_id)
         if slot is None:
             return False
+        ctx = int(np.asarray(self.cache["len"])[slot])
         sub = _gather_slots(self.cache, jnp.asarray([slot], jnp.int32))
         self._host_stash[job_id] = {
             "cache": jax.device_get(sub),
@@ -440,13 +458,41 @@ class InferenceEngine:
             "target": self._chunk_target.get(job_id),
             "tokens": self._chunk_tokens.get(job_id),
             "resumed": self._chunk_resumed.get(job_id),
+            "ctx": ctx,
         }
+        self.stash_tokens += ctx
+        if self.swap_pool_tokens is not None:
+            # evict coldest-first until under the watermark; the fresh
+            # stash (newest) is only dropped when it alone exceeds the pool
+            while (self.stash_tokens > self.swap_pool_tokens
+                   and len(self._host_stash) > 1):
+                self._evict_coldest_stash()
+            if self.stash_tokens > self.swap_pool_tokens:
+                self._evict_coldest_stash()  # the fresh stash itself
         self.evict_job(job_id)
-        return True
+        return job_id in self._host_stash
+
+    def _evict_coldest_stash(self) -> None:
+        """Watermark eviction: drop the oldest stash (coldest victim) —
+        that job resumes through the recompute-fallback path."""
+        victim, st = next(iter(self._host_stash.items()))
+        del self._host_stash[victim]
+        ctx = st.get("ctx", 0)
+        self.stash_tokens -= ctx
+        self.n_stash_evictions += 1
+        self.stash_evicted_tokens += ctx
+        self._warn_once(
+            "swap_pool_evict",
+            f"host KV swap pool exceeded its {self.swap_pool_tokens}-token "
+            f"watermark (PreemptionConfig.swap_pool_tokens); evicting the "
+            f"coldest stashed victims to recompute-fallback — raise the "
+            f"watermark or reduce preemption pressure if swap-ins were "
+            f"expected to stay warm")
 
     def restore_job(self, job: Job) -> int:
         """Swap a host-stashed job back into a free slot, bit-exactly."""
         st = self._host_stash.pop(job.job_id)
+        self.stash_tokens -= st.get("ctx", 0)
         free = [s for s, owner in enumerate(self.slot_job) if owner is None]
         if not free:
             raise RuntimeError("no free slot to restore into")
@@ -474,7 +520,9 @@ class InferenceEngine:
     def drop_stash(self, job_id: int) -> None:
         """Release a job's host-memory KV copy (terminal states, or a
         migration that abandons the cache)."""
-        self._host_stash.pop(job_id, None)
+        st = self._host_stash.pop(job_id, None)
+        if st is not None:
+            self.stash_tokens -= st.get("ctx", 0)
 
     # ------------------------------------------------------------------ #
     def _decode_window(self, window: int, batch: int):
@@ -795,8 +843,14 @@ class EngineExecutor(Backend):
 
     def __init__(self, engines: Dict[int, InferenceEngine], *,
                  swap_bandwidth_bytes_s: float = 16e9,
-                 swap_latency_s: float = 0.0005):
+                 swap_latency_s: float = 0.0005,
+                 swap_pool_tokens: Optional[int] = None):
         self.engines = engines
+        if swap_pool_tokens is not None:
+            # PreemptionConfig.swap_pool_tokens: per-engine host-stash
+            # watermark (None leaves any engine-level setting untouched)
+            for eng in engines.values():
+                eng.swap_pool_tokens = swap_pool_tokens
         self.window_log: List[Dict] = []
         #: host<->device copy model for the swap-vs-recompute break-even
         #: (``preempt_costs``) — the live copies themselves are measured
@@ -947,7 +1001,11 @@ class EngineExecutor(Backend):
                "windows_executed": len(self.window_log),
                "swapouts": self.n_swapouts, "swapins": self.n_swapins,
                "swapout_tokens": self.swapout_tokens,
-               "swapin_tokens": self.swapin_tokens}
+               "swapin_tokens": self.swapin_tokens,
+               "stash_evictions": sum(e.n_stash_evictions
+                                      for e in self.engines.values()),
+               "stash_evicted_tokens": sum(e.stash_evicted_tokens
+                                           for e in self.engines.values())}
         for per in self.node_counters().values():
             for k in ("prefill_traces", "prefill_dispatches",
                       "decode_traces", "decode_dispatches",

@@ -233,6 +233,11 @@ def main() -> None:
                          "preemption tier is priced with")
     ap.add_argument("--swap-latency", type=float, default=5e-4, metavar="S",
                     help="fixed per-transfer latency of one KV swap leg")
+    ap.add_argument("--swap-pool", type=int, default=None, metavar="TOKENS",
+                    help="watermark bounding each engine's host KV swap "
+                         "pool, in stashed context tokens; over-watermark "
+                         "swap-outs evict the coldest stashed victims to "
+                         "recompute-fallback (default: unbounded)")
     ap.add_argument("--max-output", type=int, default=32)
     ap.add_argument("--trace", default=None)
     ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
@@ -284,7 +289,8 @@ def main() -> None:
     predictor = build_predictor(args) if needs_predictor else None
     executor = EngineExecutor(engines,
                               swap_bandwidth_bytes_s=args.swap_bandwidth,
-                              swap_latency_s=args.swap_latency)
+                              swap_latency_s=args.swap_latency,
+                              swap_pool_tokens=args.swap_pool)
     node_token_cost = None
     if args.probe_nodes > 0:
         node_token_cost = probe_node_costs(executor, args.probe_nodes)
@@ -302,7 +308,8 @@ def main() -> None:
                                       risk_quantile=args.risk_quantile,
                                       prefill_chunk=args.prefill_chunk),
             preemption=PreemptionConfig(enabled=not args.no_preemption,
-                                        policy=args.preempt_policy),
+                                        policy=args.preempt_policy,
+                                        swap_pool_tokens=args.swap_pool),
             placement=args.placement,
             node_token_cost=node_token_cost,
             rebalance=args.rebalance,

@@ -1,7 +1,18 @@
-"""Training objective: next-token cross-entropy (+ MoE aux loss)."""
+"""Training objectives: next-token cross-entropy (+ MoE aux loss) for the
+serving models, and the learning-to-rank losses for the length predictor's
+ranking head (pairwise margin / listwise softmax over in-batch pools).
+
+ISRTF only consumes the *order* of predicted remaining lengths, so a head
+trained to rank (Fu et al., arXiv 2408.15792; Tao et al., arXiv 2510.03243)
+can beat the point regressor at the scheduling objective even when its
+magnitudes are useless — the two-head design in
+:class:`repro.core.predictor.BGEPredictor` keeps the regression head for the
+cluster layer's predicted-work accounting and trains this ranking head as a
+sibling on the shared encoder trunk."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,3 +54,97 @@ def loss_fn(params, cfg, batch: Dict, *, attn_impl: str = "xla",
     ce = cross_entropy(logits, labels, mask)
     total = ce + cfg.moe.router_aux_weight * aux if cfg.moe.enabled else ce
     return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# learning-to-rank losses for the length predictor's ranking head
+# ---------------------------------------------------------------------------
+
+RANKING_LOSSES = ("pairwise", "listwise")
+PAIR_SAMPLING = ("all", "same_step")
+
+
+@dataclass(frozen=True)
+class RankingConfig:
+    """Configuration for the sibling ranking head on the BGE predictor.
+
+    Presence of this config on :class:`repro.core.predictor.PredictorConfig`
+    *enables* the second head; ``None`` (the default) keeps the predictor's
+    parameter tree and traces bit-identical to the single-head model.
+    ``margin`` is in log-token units (0.1 ≈ "10% longer should score
+    higher"), matching the head's log-space output."""
+
+    #: hinge margin for the pairwise loss, in log-token units
+    margin: float = 0.1
+    #: weight of the ranking loss relative to the regression Huber loss
+    weight: float = 1.0
+    #: "pairwise" margin hinge | "listwise" softmax cross-entropy
+    loss: str = "pairwise"
+    #: which in-batch pairs train the head: "all" | "same_step" (only
+    #: compare requests observed at the same 50-token scheduling step, the
+    #: comparison ISRTF actually makes)
+    pair_sampling: str = "all"
+    #: temperature on the log-label target distribution (listwise only)
+    listwise_temperature: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.loss not in RANKING_LOSSES:
+            raise ValueError(
+                f"unknown ranking loss {self.loss!r} "
+                f"(choose one of {RANKING_LOSSES})")
+        if self.pair_sampling not in PAIR_SAMPLING:
+            raise ValueError(
+                f"unknown pair_sampling {self.pair_sampling!r} "
+                f"(choose one of {PAIR_SAMPLING})")
+
+
+def pairwise_margin_loss(scores: jnp.ndarray, log_labels: jnp.ndarray,
+                         valid: jnp.ndarray, *, margin: float,
+                         pair_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean hinge over all ordered in-batch pairs where label_i > label_j.
+
+    ``scores`` and ``log_labels`` are (B,) in log space; the hinge wants
+    score_i − score_j ≥ margin whenever request i truly runs longer than
+    request j.  Ties contribute nothing.  ``valid`` masks padded rows and
+    ``pair_mask`` optionally restricts which (i, j) pairs count."""
+    sdiff = scores[:, None] - scores[None, :]
+    want = (log_labels[:, None] - log_labels[None, :]) > 0.0
+    pairs = valid[:, None] & valid[None, :] & want
+    if pair_mask is not None:
+        pairs = pairs & pair_mask
+    hinge = jnp.maximum(margin - sdiff, 0.0)
+    denom = jnp.maximum(jnp.sum(pairs), 1)
+    return jnp.sum(jnp.where(pairs, hinge, 0.0)) / denom
+
+
+def listwise_softmax_loss(scores: jnp.ndarray, log_labels: jnp.ndarray,
+                          valid: jnp.ndarray, *,
+                          temperature: float = 1.0) -> jnp.ndarray:
+    """ListNet-style cross-entropy between the label and score distributions.
+
+    The target is softmax(log_labels / T) over valid rows — longer requests
+    get more probability mass — and the loss is its cross-entropy against
+    log_softmax(scores)."""
+    neg = jnp.float32(-1e9)
+    target = jax.nn.softmax(jnp.where(valid, log_labels / temperature, neg))
+    logp = jax.nn.log_softmax(jnp.where(valid, scores, neg))
+    return -jnp.sum(jnp.where(valid, target * logp, 0.0))
+
+
+def ranking_loss(cfg: RankingConfig, scores: jnp.ndarray, labels: jnp.ndarray,
+                 valid: jnp.ndarray,
+                 steps: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Dispatch to the configured ranking loss.
+
+    ``labels`` are raw remaining-token counts (compared in log space so the
+    margin is scale-relative); ``steps`` is the per-row scheduling step used
+    by ``pair_sampling="same_step"``."""
+    log_labels = jnp.log(jnp.maximum(labels.astype(jnp.float32), 1.0))
+    if cfg.loss == "listwise":
+        return listwise_softmax_loss(
+            scores, log_labels, valid, temperature=cfg.listwise_temperature)
+    pair_mask = None
+    if cfg.pair_sampling == "same_step" and steps is not None:
+        pair_mask = steps[:, None] == steps[None, :]
+    return pairwise_margin_loss(
+        scores, log_labels, valid, margin=cfg.margin, pair_mask=pair_mask)

@@ -98,6 +98,11 @@ class ExperimentConfig:
     #: risk-aware ISRTF: rank on this calibrated upper quantile instead of
     #: the point estimate (None = the paper's mean ranking)
     risk_quantile: Optional[float] = None
+    #: pool-ordering source for re-predicting policies: "magnitude" (the
+    #: calibrated mean / risk quantile) | "rank_score" (the learning-to-rank
+    #: head — needs predictor="ranked" with a two-head bge).  Load
+    #: accounting stays on the mean either way (SchedulerConfig.rank_by)
+    rank_by: str = "magnitude"
     #: synthetic multiplicative mis-calibration injected into the noisy
     #: oracle (< 1 = systematic underestimates); 1.0 = unbiased
     predictor_bias: float = 1.0
@@ -186,6 +191,7 @@ def run_experiment(cfg: ExperimentConfig, *, bge=None,
             aging_rate=cfg.aging_rate, repredict_every=cfg.repredict_every,
             risk_quantile=cfg.risk_quantile,
             prefill_chunk=cfg.prefill_chunk,
+            rank_by=cfg.rank_by,
         ),
         preemption=cfg.preemption,
         placement=cfg.placement,

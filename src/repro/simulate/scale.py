@@ -63,6 +63,7 @@ from repro.core.metrics import StreamingSummary, fairness_ratio
 from repro.core.scheduler import (
     PREEMPT_POLICIES,
     PRIORITY_CLASS_WEIGHT,
+    RANK_BY,
     PreemptionConfig,
     decide_preempt,
     select_fills,
@@ -137,6 +138,10 @@ class ScaleSimConfig:
     #: (SimExecutor mirror)
     swap_bandwidth_bytes_s: float = 16e9
     swap_latency_s: float = 0.0005
+    #: pool-ordering source (SchedulerConfig.rank_by mirror).  The fast
+    #: path only supports "magnitude": rank scores come from the two-head
+    #: BGE predictor, which is exact-loop-only (see ``_PREDICTORS``)
+    rank_by: str = "magnitude"
 
     # ------------------------------------------------------------------ #
     def validate(self) -> None:
@@ -169,6 +174,14 @@ class ScaleSimConfig:
         if self.placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {self.placement!r} "
                              f"(have {sorted(PLACEMENTS)})")
+        if self.rank_by not in RANK_BY:
+            raise ValueError(
+                f"unknown rank_by {self.rank_by!r} (choose one of {RANK_BY})")
+        if self.rank_by == "rank_score":
+            raise ValueError(
+                "rank_by='rank_score' needs the two-head ranked (bge) "
+                "predictor, which the scale fast path does not support — "
+                "run through repro.simulate.runner.run_experiment")
         if self.n_nodes < 1 or self.batch_size < 1 or self.window < 1:
             raise ValueError("n_nodes, batch_size and window must be >= 1")
 
@@ -921,7 +934,7 @@ def run_exact_reference(cfg: ScaleSimConfig, w: ScaleWorkload) -> ExactResult:
         scheduler=SchedulerConfig(
             policy=cfg.policy, window=cfg.window, batch_size=cfg.batch_size,
             aging_rate=cfg.aging_rate, repredict_every=cfg.repredict_every,
-            prefill_chunk=cfg.prefill_chunk),
+            prefill_chunk=cfg.prefill_chunk, rank_by=cfg.rank_by),
         preemption=cfg.preemption,
         placement=cfg.placement,
         node_token_cost=executor.node_token_cost(cfg.n_nodes),

@@ -320,11 +320,12 @@ def test_make_predictor_registry_and_composition():
     assert isinstance(c, ConformalPredictor)
     assert isinstance(c.base, EMADebiasedPredictor)
     assert isinstance(c.base.base, NoisyOraclePredictor)
-    with pytest.raises(ValueError):
+    # unknown-name errors list the valid choices, including the ranked kind
+    with pytest.raises(ValueError, match=r"ranked"):
         make_predictor("nope")
     with pytest.raises(ValueError):
         make_predictor("bge")  # needs bge=
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match=r"conformal"):
         CalibrationConfig.from_name("bogus")
     cfg = CalibrationConfig.from_name("ema")
     assert cfg.debias and not cfg.conformal

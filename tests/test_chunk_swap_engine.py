@@ -252,3 +252,93 @@ def test_resume_cost_parity_swap(setup, chunk):
     assert eng.resume_context_tokens == 0
     assert _sim_resume_charge(9, gen, policy="swap",
                               prefill_chunk=chunk) == 0
+
+
+# --------------------------------------------------------------------------- #
+# Swap-pool watermark (PreemptionConfig.swap_pool_tokens)
+# --------------------------------------------------------------------------- #
+
+
+def _offload_n(cfg, params, n, *, window=5, plen=9, max_slots=None):
+    """Run ``n`` jobs one window each, return (engine, jobs) pre-offload."""
+    eng = InferenceEngine(cfg, params, _ecfg(max_slots=max_slots or n))
+    jobs = [_job(50 + i, plen) for i in range(n)]
+    toks, _ = eng.run_window(jobs, window)
+    for j, t in zip(jobs, toks):
+        j.generated.extend(t)
+    return eng, jobs
+
+
+def test_swap_pool_unbounded_by_default(setup):
+    cfg, params = setup
+    eng, jobs = _offload_n(cfg, params, 2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")              # any warning -> failure
+        for j in jobs:
+            assert eng.offload_job(j.job_id)
+    assert eng.n_stash_evictions == 0
+    assert eng.stash_tokens > 0
+    assert all(eng.has_stash(j.job_id) for j in jobs)
+
+
+def test_swap_pool_evicts_coldest_with_warning(setup):
+    cfg, params = setup
+    eng, jobs = _offload_n(cfg, params, 3)
+    assert eng.offload_job(jobs[0].job_id)
+    ctx = eng.stash_tokens                           # one stash's footprint
+    # pool fits exactly two stashes: the third swap-out must evict the
+    # COLDEST victim (jobs[0], the oldest swap-out), not a newer one
+    eng.swap_pool_tokens = 2 * ctx
+    assert eng.offload_job(jobs[1].job_id)
+    with pytest.warns(UserWarning, match=r"swap pool exceeded"):
+        assert eng.offload_job(jobs[2].job_id)
+    assert not eng.has_stash(jobs[0].job_id)
+    assert eng.has_stash(jobs[1].job_id)
+    assert eng.has_stash(jobs[2].job_id)
+    assert eng.n_stash_evictions == 1
+    assert eng.stash_evicted_tokens == ctx
+    assert eng.stash_tokens == 2 * ctx
+    # the evicted victim's stash is GONE — resume goes through the
+    # recompute-fallback path, not a silent stale restore
+    with pytest.raises(KeyError):
+        eng.restore_job(jobs[0])
+
+
+def test_swap_pool_refuses_oversized_fresh_stash(setup):
+    cfg, params = setup
+    eng, jobs = _offload_n(cfg, params, 1)
+    eng.swap_pool_tokens = 1                         # smaller than any stash
+    with pytest.warns(UserWarning, match=r"recompute-fallback"):
+        assert not eng.offload_job(jobs[0].job_id)   # caller falls back
+    assert eng.stash_tokens == 0 and len(eng._host_stash) == 0
+    assert eng.n_stash_evictions == 1
+    assert not eng.has_job(jobs[0].job_id)           # still evicted
+
+
+def test_swap_pool_accounting_roundtrip(setup):
+    cfg, params = setup
+    eng, jobs = _offload_n(cfg, params, 2)
+    assert eng.offload_job(jobs[0].job_id)
+    assert eng.offload_job(jobs[1].job_id)
+    total = eng.stash_tokens
+    assert total > 0
+    eng.restore_job(jobs[0])
+    mid = eng.stash_tokens
+    assert 0 < mid < total
+    eng.drop_stash(jobs[1].job_id)
+    assert eng.stash_tokens == 0
+
+
+def test_executor_threads_watermark_and_counters(setup):
+    from repro.engine.engine import EngineExecutor
+
+    cfg, params = setup
+    eng, jobs = _offload_n(cfg, params, 2)
+    ex = EngineExecutor({0: eng}, swap_pool_tokens=123)
+    assert eng.swap_pool_tokens == 123
+    c = ex.counters()
+    assert c["stash_evictions"] == 0
+    assert c["stash_evicted_tokens"] == 0
+    # None leaves engine-level settings untouched
+    EngineExecutor({0: eng})
+    assert eng.swap_pool_tokens == 123

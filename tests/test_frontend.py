@@ -294,6 +294,8 @@ def test_busy_until_is_live_and_monotone():
 PRE_PR_SHA = "726cdb4"
 #: last commit before the distribution-aware predictor API (PR 5)
 PRE_PR5_SHA = "9e4b2da"
+#: last commit before the learning-to-rank subsystem (PR 10)
+PRE_PR10_SHA = "a4aaa01"
 
 PROBE = """
 import json
@@ -316,6 +318,23 @@ cfg = ExperimentConfig(model="vic", policy="isrtf", predictor="noisy_oracle",
                        rps_multiple=1.3, seed=3,
                        placement="least_predicted_work", rebalance=True,
                        arrivals="bursty", burst_size=12)
+print(json.dumps(run_experiment(cfg), sort_keys=True))
+"""
+
+
+#: PR 10 pin: with ranking disabled (the defaults — rank_by="magnitude",
+#: PredictorConfig.ranking=None) the two-head refactor of the predictor and
+#: the rank_by branch in score_jobs must be invisible; preemption pressure
+#: (tight batch, bursty arrivals) exercises the swap-pool-adjacent engine
+#: paths with swap_pool_tokens unset
+PROBE_RANK_OFF = """
+import json
+from repro.simulate import ExperimentConfig, run_experiment
+cfg = ExperimentConfig(model="vic", policy="isrtf", predictor="noisy_oracle",
+                       n_requests=40, n_nodes=2, batch_size=3,
+                       rps_multiple=1.6, seed=5,
+                       placement="least_predicted_work",
+                       arrivals="bursty", burst_size=16)
 print(json.dumps(run_experiment(cfg), sort_keys=True))
 """
 
@@ -378,6 +397,24 @@ def test_predict_api_trace_identical_to_pre_pr5(tmp_path):
                            n_nodes=2, batch_size=4, rps_multiple=1.3, seed=3,
                            placement="least_predicted_work", rebalance=True,
                            arrivals="bursty", burst_size=12)
+    new_metrics = run_experiment(cfg)
+    for k, v in old_metrics.items():
+        assert new_metrics[k] == v, (k, v, new_metrics[k])
+
+
+def test_rank_subsystem_off_trace_identical_to_pre_pr10(tmp_path):
+    """With the learning-to-rank subsystem disabled (the defaults), the
+    per-job JCT trace must be bit-identical to the pre-PR-10 build: the
+    rank_by branch, the LengthPrediction.rank_score field, and the two-head
+    predictor plumbing may not perturb a single draw or comparison."""
+    old_metrics = _old_build_metrics(tmp_path, PRE_PR10_SHA, PROBE_RANK_OFF)
+
+    from repro.simulate import ExperimentConfig, run_experiment
+    cfg = ExperimentConfig(model="vic", policy="isrtf",
+                           predictor="noisy_oracle", n_requests=40,
+                           n_nodes=2, batch_size=3, rps_multiple=1.6, seed=5,
+                           placement="least_predicted_work",
+                           arrivals="bursty", burst_size=16)
     new_metrics = run_experiment(cfg)
     for k, v in old_metrics.items():
         assert new_metrics[k] == v, (k, v, new_metrics[k])

@@ -1,0 +1,489 @@
+"""Learning-to-rank subsystem: ranking losses, the two-head BGE predictor,
+rank-aware ISRTF ordering (``SchedulerConfig.rank_by``), Kendall-τ, the
+``RankedPredictor`` online feedback loop (censoring + deterministic pair
+harvesting), and the guarantee that rank scores NEVER leak into the
+cluster layer's predicted-work accounting."""
+import math
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BGEPredictor,
+    CalibrationConfig,
+    ConformalPredictor,
+    EMADebiasedPredictor,
+    Job,
+    JobState,
+    LengthPrediction,
+    LengthPredictor,
+    OraclePredictor,
+    PredictorConfig,
+    RankedPredictor,
+    RankingConfig,
+    SchedulerConfig,
+    kendall_tau,
+    make_policy,
+    make_predictor,
+)
+from repro.core.scheduler import RANK_BY, score_jobs
+from repro.models.encoder import EncoderArchConfig
+from repro.models.objective import (
+    listwise_softmax_loss,
+    pairwise_margin_loss,
+    ranking_loss,
+)
+
+
+def mk_job(jid, true_len=100, arrival=0.0, generated=0, prompt_tokens=None):
+    j = Job(job_id=jid, prompt=f"p{jid}",
+            prompt_tokens=prompt_tokens or [1, 2, 3],
+            arrival_time=arrival, true_output_len=true_len)
+    j.generated = [7] * generated
+    return j
+
+
+def tiny_cfg(ranking=None):
+    return PredictorConfig(
+        encoder=EncoderArchConfig(d_model=16, n_heads=2, n_layers=1,
+                                  d_ff=32, max_len=32),
+        n_fc_layers=2, fc_hidden=16, max_len=32, ranking=ranking)
+
+
+def trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+class FakeRankPredictor(LengthPredictor):
+    """Deterministic two-head stand-in: mean and rank_score per job id."""
+
+    def __init__(self, means, ranks):
+        self.means = means
+        self.ranks = ranks
+
+    def predict(self, jobs):
+        return [LengthPrediction(mean=float(self.means[j.job_id]),
+                                 rank_score=float(self.ranks[j.job_id]))
+                for j in jobs]
+
+
+# --------------------------------------------------------------------------- #
+# RankingConfig + loss functions
+# --------------------------------------------------------------------------- #
+
+
+class TestRankingLosses:
+    def test_config_rejects_unknown_loss(self):
+        with pytest.raises(ValueError, match=r"listwise"):
+            RankingConfig(loss="hinge^2")
+
+    def test_config_rejects_unknown_pair_sampling(self):
+        with pytest.raises(ValueError, match=r"same_step"):
+            RankingConfig(pair_sampling="adjacent")
+
+    def test_pairwise_zero_when_ordering_respected_with_margin(self):
+        scores = np.array([2.0, 1.0, 0.0], np.float32)
+        log_labels = np.array([3.0, 2.0, 1.0], np.float32)
+        valid = np.array([True, True, True])
+        loss = pairwise_margin_loss(scores, log_labels, valid, margin=0.5)
+        assert float(loss) == pytest.approx(0.0, abs=1e-7)
+
+    def test_pairwise_penalises_inverted_ordering(self):
+        scores = np.array([0.0, 1.0, 2.0], np.float32)
+        log_labels = np.array([3.0, 2.0, 1.0], np.float32)
+        valid = np.array([True, True, True])
+        loss = pairwise_margin_loss(scores, log_labels, valid, margin=0.5)
+        # hinges: pairs (0,1),(1,2) violated by 1 + margin, (0,2) by 2 +
+        # margin -> mean (1.5 + 2.5 + 1.5) / 3
+        assert float(loss) == pytest.approx(5.5 / 3, abs=1e-6)
+
+    def test_pairwise_ignores_invalid_rows_and_ties(self):
+        scores = np.array([0.0, 5.0, -3.0], np.float32)
+        log_labels = np.array([2.0, 2.0, 9.0], np.float32)
+        valid = np.array([True, True, False])
+        # rows 0/1 tie on label, row 2 is padding -> no pairs at all
+        loss = pairwise_margin_loss(scores, log_labels, valid, margin=0.5)
+        assert float(loss) == pytest.approx(0.0, abs=1e-7)
+
+    def test_listwise_prefers_aligned_scores(self):
+        log_labels = np.array([3.0, 2.0, 1.0], np.float32)
+        valid = np.array([True, True, True])
+        aligned = listwise_softmax_loss(
+            np.array([3.0, 2.0, 1.0], np.float32), log_labels, valid)
+        inverted = listwise_softmax_loss(
+            np.array([1.0, 2.0, 3.0], np.float32), log_labels, valid)
+        assert float(aligned) < float(inverted)
+
+    def test_ranking_loss_same_step_masks_cross_step_pairs(self):
+        cfg = RankingConfig(pair_sampling="same_step", margin=0.1)
+        scores = np.array([1.0, 0.0, 5.0], np.float32)
+        labels = np.array([100.0, 10.0, 1.0], np.float32)
+        valid = np.array([True, True, True])
+        steps = np.array([0, 0, 1], np.int32)
+        masked = ranking_loss(cfg, scores, labels, valid, steps=steps)
+        # only the (0, 1) same-step pair counts and it is satisfied
+        assert float(masked) == pytest.approx(0.0, abs=1e-7)
+        allpairs = ranking_loss(RankingConfig(margin=0.1), scores, labels,
+                                valid, steps=steps)
+        # cross-step pairs (0,2) and (1,2) are badly violated
+        assert float(allpairs) > 1.0
+
+    def test_listwise_dispatch(self):
+        cfg = RankingConfig(loss="listwise", listwise_temperature=2.0)
+        scores = np.array([1.0, 2.0], np.float32)
+        labels = np.array([10.0, 100.0], np.float32)
+        valid = np.array([True, True])
+        got = ranking_loss(cfg, scores, labels, valid)
+        want = listwise_softmax_loss(
+            scores, np.log(labels), valid, temperature=2.0)
+        assert float(got) == pytest.approx(float(want), abs=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# Kendall-τ
+# --------------------------------------------------------------------------- #
+
+
+class TestKendallTau:
+    def test_perfect_and_inverted(self):
+        assert kendall_tau([1, 2, 3, 4], [10, 20, 30, 40]) == pytest.approx(1.0)
+        assert kendall_tau([1, 2, 3, 4], [40, 30, 20, 10]) == pytest.approx(-1.0)
+
+    def test_tau_b_tie_correction(self):
+        # P=4, Q=0, Tx=2, Ty=0 -> 4 / sqrt(6 * 4)
+        got = kendall_tau([1, 1, 2, 2], [1, 2, 3, 4])
+        assert got == pytest.approx(4 / math.sqrt(24), abs=1e-9)
+
+    def test_degenerate_inputs(self):
+        assert kendall_tau([], []) == 0.0
+        assert kendall_tau([5], [3]) == 0.0
+        assert kendall_tau([2, 2, 2], [1, 2, 3]) == 0.0
+
+    def test_length_mismatch_raises(self):
+        with pytest.raises(ValueError, match=r"length"):
+            kendall_tau([1, 2], [1, 2, 3])
+
+
+# --------------------------------------------------------------------------- #
+# Two-head BGE predictor
+# --------------------------------------------------------------------------- #
+
+
+class TestTwoHeadBGE:
+    def test_param_tree_identical_with_ranking_off(self):
+        single = BGEPredictor(tiny_cfg(), seed=0)
+        two = BGEPredictor(tiny_cfg(RankingConfig()), seed=0)
+        assert "rank_head" in two.params and "rank_head" not in single.params
+        for k in single.params:
+            assert trees_equal(single.params[k], two.params[k]), k
+
+    def test_regression_path_identical_with_ranking_on(self):
+        single = BGEPredictor(tiny_cfg(), seed=0)
+        two = BGEPredictor(tiny_cfg(RankingConfig()), seed=0)
+        toks = [[1, 2, 3], [4, 5], [6]]
+        np.testing.assert_array_equal(single.predict_tokens(toks),
+                                      two.predict_tokens(toks))
+
+    def test_predict_attaches_rank_scores_in_one_dispatch(self):
+        two = BGEPredictor(tiny_cfg(RankingConfig()), seed=0)
+        jobs = [mk_job(i, true_len=50 + i) for i in range(3)]
+        before = two.num_dispatches
+        preds = two.predict(jobs)
+        assert two.num_dispatches == before + 1
+        assert all(p.rank_score is not None and p.rank_score > 0
+                   for p in preds)
+        # token-scale clip: exp([-2, 8])
+        assert all(math.exp(-2) <= p.rank_score <= math.exp(8)
+                   for p in preds)
+
+    def test_single_head_predictions_carry_no_rank_score(self):
+        single = BGEPredictor(tiny_cfg(), seed=0)
+        [p] = single.predict([mk_job(0)])
+        assert p.rank_score is None
+        with pytest.raises(ValueError, match=r"ranking"):
+            single.predict_tokens_ranked([[1, 2]])
+
+    def test_two_head_fit_improves_rank_tau_smoke(self):
+        # joint fit must run end to end and report both heads' metrics
+        from repro.data import make_predictor_dataset
+
+        two = BGEPredictor(tiny_cfg(RankingConfig()), seed=0)
+        tr, _, te = make_predictor_dataset(40, seed=0, max_len=32,
+                                           max_steps=2)
+        metrics = two.fit(tr, num_steps=4, batch_size=8)
+        assert all("rank_loss" in m for m in metrics.values())
+        out = two.evaluate_rank(te)
+        assert -1.0 <= out["kendall_tau"] <= 1.0
+
+
+# --------------------------------------------------------------------------- #
+# rank_by: ordering vs accounting
+# --------------------------------------------------------------------------- #
+
+
+class TestRankBy:
+    def _policy(self, pred, rank_by, **kw):
+        return make_policy(
+            SchedulerConfig(policy="isrtf", rank_by=rank_by, **kw), pred)
+
+    def test_ordering_follows_rank_head_accounting_follows_mean(self):
+        # rank head orders OPPOSITE to the means: the pool order must flip
+        # while expected_remaining stays on the mean
+        means = {0: 10.0, 1: 20.0, 2: 30.0}
+        ranks = {0: 3.0, 1: 2.0, 2: 1.0}
+        jobs = [mk_job(i) for i in range(3)]
+        pol = self._policy(FakeRankPredictor(means, ranks), "rank_score")
+        raw = score_jobs(pol, jobs, now=0.0)
+        assert raw == [3.0, 2.0, 1.0]
+        assert [j.priority for j in jobs] == [3.0, 2.0, 1.0]
+        assert [j.expected_remaining for j in jobs] == [10.0, 20.0, 30.0]
+
+    def test_magnitude_default_ignores_rank_scores(self):
+        means = {0: 10.0, 1: 20.0}
+        ranks = {0: 99.0, 1: 1.0}
+        jobs = [mk_job(i) for i in range(2)]
+        pol = self._policy(FakeRankPredictor(means, ranks), "magnitude")
+        raw = score_jobs(pol, jobs, now=0.0)
+        assert raw == [10.0, 20.0]
+        assert [j.expected_remaining for j in jobs] == [10.0, 20.0]
+
+    def test_unknown_rank_by_lists_choices(self):
+        with pytest.raises(ValueError, match=r"magnitude.*rank_score"):
+            make_policy(SchedulerConfig(policy="isrtf", rank_by="nope"),
+                        OraclePredictor())
+
+    def test_rank_score_conflicts_with_risk_quantile(self):
+        with pytest.raises(ValueError, match=r"mutually exclusive"):
+            make_policy(SchedulerConfig(policy="isrtf", rank_by="rank_score",
+                                        risk_quantile=0.9),
+                        OraclePredictor())
+
+    def test_rank_score_without_ranked_predictor_is_loud(self):
+        pol = self._policy(OraclePredictor(), "rank_score")
+        with pytest.raises(ValueError, match=r"two-head ranked"):
+            score_jobs(pol, [mk_job(0)], now=0.0)
+
+    def test_scale_sim_rejects_rank_by(self):
+        from repro.simulate.scale import ScaleSimConfig
+
+        with pytest.raises(ValueError, match=r"rank_by"):
+            ScaleSimConfig(model="vic", rank_by="nope").validate()
+        with pytest.raises(ValueError, match=r"run_experiment"):
+            ScaleSimConfig(model="vic", rank_by="rank_score").validate()
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.floats(1.0, 1e4), st.floats(0.2, 2e3)),
+                    min_size=1, max_size=12),
+           st.sampled_from(RANK_BY))
+    def test_rank_scores_never_leak_into_work_accounting(self, pool, rank_by):
+        # PROPERTY: whatever orders the pool, expected_remaining (the value
+        # the cluster layer's predicted-work accounting consumes) is the
+        # regression mean, bit-exactly, for every job
+        means = {i: m for i, (m, _) in enumerate(pool)}
+        ranks = {i: r for i, (_, r) in enumerate(pool)}
+        jobs = [mk_job(i) for i in range(len(pool))]
+        pol = self._policy(FakeRankPredictor(means, ranks), rank_by)
+        raw = score_jobs(pol, jobs, now=0.0)
+        for i, j in enumerate(jobs):
+            assert j.expected_remaining == means[i]
+            assert j.pred_trace[-1] == (0, means[i])
+            assert raw[i] == (ranks[i] if rank_by == "rank_score"
+                              else means[i])
+
+
+# --------------------------------------------------------------------------- #
+# Calibration wrappers pass rank_score through
+# --------------------------------------------------------------------------- #
+
+
+class TestWrapperPassthrough:
+    def _warm(self, wrapped, n=40):
+        for i in range(1000, 1000 + n):
+            j = mk_job(i, true_len=60)
+            wrapped.predict([j])
+            j.generated = [7] * 60
+            j.state = JobState.FINISHED
+            wrapped.observe(j, 0.0)
+
+    def test_ema_preserves_rank_score(self):
+        base = FakeRankPredictor({i: 30.0 for i in range(2000)},
+                                 {i: 7.5 for i in range(2000)})
+        w = EMADebiasedPredictor(base, CalibrationConfig(
+            debias=True, min_samples=4, by_step=False))
+        self._warm(w)
+        [p] = w.predict([mk_job(0)])
+        assert p.rank_score == 7.5
+        assert p.mean != 30.0  # the point estimate WAS debiased
+
+    def test_conformal_preserves_rank_score(self):
+        base = FakeRankPredictor({i: 30.0 for i in range(2000)},
+                                 {i: 7.5 for i in range(2000)})
+        w = ConformalPredictor(base, CalibrationConfig(
+            conformal=True, min_samples=4, by_step=False))
+        self._warm(w)
+        [p] = w.predict([mk_job(0)])
+        assert p.rank_score == 7.5
+        assert p.quantile(0.9) > p.mean  # the ladder IS active
+
+
+# --------------------------------------------------------------------------- #
+# RankedPredictor: registry, censoring, determinism, online updates
+# --------------------------------------------------------------------------- #
+
+
+def two_head(seed=0):
+    return BGEPredictor(tiny_cfg(RankingConfig()), seed=seed)
+
+
+class TestRankedPredictor:
+    def test_registry_requires_two_head_bge(self):
+        with pytest.raises(ValueError, match=r"two-head"):
+            make_predictor("ranked")
+        with pytest.raises(ValueError, match=r"two-head"):
+            RankedPredictor(BGEPredictor(tiny_cfg(), seed=0))
+        rp = make_predictor("ranked", bge=two_head())
+        assert isinstance(rp, RankedPredictor)
+        # idempotent: an already-wrapped predictor passes through
+        assert make_predictor("ranked", bge=rp) is rp
+
+    def test_unknown_registry_names_list_ranked(self):
+        with pytest.raises(ValueError, match=r"ranked"):
+            make_predictor("bogus")
+
+    def test_predictions_carry_rank_scores(self):
+        rp = RankedPredictor(two_head())
+        preds = rp.predict([mk_job(0), mk_job(1)])
+        assert all(p.rank_score is not None for p in preds)
+
+    @pytest.mark.parametrize("state", [JobState.CANCELLED, JobState.EXPIRED])
+    def test_censoring_never_forms_pairs(self, state):
+        rp = RankedPredictor(two_head(), pairs_per_update=1, update_every=1)
+        for i in range(6):
+            j = mk_job(i, true_len=40)
+            rp.predict([j])
+            j.generated = [7] * (10 + i)
+            j.state = state
+            rp.observe(j, 0.0)
+        assert rp.n_observed == 0
+        assert rp.pair_log == []
+        assert rp.n_updates == 0
+        assert len(rp._pending) == 0
+        assert len(rp._records) == 0
+
+    def test_finished_jobs_resolve_and_censored_mixture_excluded(self):
+        rp = RankedPredictor(two_head(), pairs_per_update=1, update_every=100)
+        cancelled_ids = set()
+        for i in range(8):
+            j = mk_job(i, true_len=30 + 5 * i)
+            rp.predict([j])
+            if i % 2:
+                j.state = JobState.CANCELLED
+                cancelled_ids.add(i)
+            else:
+                j.generated = [7] * j.true_output_len
+                j.state = JobState.FINISHED
+            rp.observe(j, 0.0)
+        assert rp.n_observed == 4
+        assert all(rec[0] not in cancelled_ids for rec in rp._records)
+
+    @settings(max_examples=5, deadline=None)
+    @given(st.lists(st.integers(5, 60), min_size=10, max_size=16),
+           st.integers(0, 100))
+    def test_pair_harvest_deterministic_under_fixed_seed(self, lens, seed):
+        # PROPERTY: the harvested pair sequence and the updated params are
+        # a pure function of (observation order, seed) — two identically
+        # seeded instances fed the same jobs agree bit-exactly
+        def run_one():
+            rp = RankedPredictor(two_head(seed=1), seed=seed, window=32,
+                                 pairs_per_update=2, update_every=4)
+            for i, L in enumerate(lens):
+                j = mk_job(i, true_len=L)
+                rp.predict([j])
+                j.generated = [7] * L
+                j.state = JobState.FINISHED
+                rp.observe(j, 0.0)
+            return rp
+
+        a, b = run_one(), run_one()
+        assert a.pair_log == b.pair_log
+        assert a.n_updates == b.n_updates and a.n_pairs == b.n_pairs
+        assert trees_equal(a.base.params, b.base.params)
+        if len(lens) >= 2 * 2:
+            assert a.n_updates > 0  # the property actually exercised SGD
+
+    def test_online_updates_touch_heads_not_encoder(self):
+        base = two_head()
+        rp = RankedPredictor(base, pairs_per_update=2, update_every=4)
+        enc_before = jax.tree_util.tree_map(np.asarray,
+                                            base.params["encoder"])
+        head_before = jax.tree_util.tree_map(np.asarray, base.params["head"])
+        for i in range(8):
+            j = mk_job(i, true_len=20 + 7 * i)
+            rp.predict([j])
+            j.generated = [7] * j.true_output_len
+            j.state = JobState.FINISHED
+            rp.observe(j, 0.0)
+        assert rp.n_updates >= 1
+        assert trees_equal(enc_before, base.params["encoder"])
+        assert not trees_equal(head_before, base.params["head"])
+
+    def test_params_reassigned_not_mutated(self):
+        # benchmark isolation contract: a snapshot of base.params taken
+        # before online updates is never mutated in place
+        base = two_head()
+        rp = RankedPredictor(base, pairs_per_update=2, update_every=4)
+        snap = base.params
+        snap_head = jax.tree_util.tree_map(np.asarray, snap["head"])
+        for i in range(8):
+            j = mk_job(i, true_len=20 + 7 * i)
+            rp.predict([j])
+            j.generated = [7] * j.true_output_len
+            j.state = JobState.FINISHED
+            rp.observe(j, 0.0)
+        assert rp.n_updates >= 1
+        assert base.params is not snap
+        assert trees_equal(snap_head, snap["head"])
+
+
+# --------------------------------------------------------------------------- #
+# End to end: rank-ordered ISRTF drains cleanly
+# --------------------------------------------------------------------------- #
+
+
+class TestEndToEnd:
+    def test_rank_ordered_isrtf_drains(self):
+        from repro.simulate import ExperimentConfig, run_experiment
+
+        m = run_experiment(
+            ExperimentConfig(model="vic", policy="isrtf",
+                             predictor="ranked", rank_by="rank_score",
+                             n_requests=12, batch_size=2, seed=0),
+            bge=two_head())
+        assert m["n_unfinished"] == 0 and m["n_finished"] == 12
+
+    def test_rank_ordered_isrtf_composes_with_conformal(self):
+        from repro.simulate import ExperimentConfig, run_experiment
+
+        m = run_experiment(
+            ExperimentConfig(model="vic", policy="isrtf",
+                             predictor="ranked", rank_by="rank_score",
+                             calibrate="conformal",
+                             n_requests=10, batch_size=2, seed=1),
+            bge=two_head())
+        assert m["n_unfinished"] == 0
+
+    def test_runner_rejects_rank_score_on_magnitude_predictor(self):
+        from repro.simulate import ExperimentConfig, run_experiment
+
+        with pytest.raises(ValueError, match=r"rank_score"):
+            run_experiment(
+                ExperimentConfig(model="vic", policy="isrtf",
+                                 predictor="oracle", rank_by="rank_score",
+                                 n_requests=4, batch_size=2, seed=0))
